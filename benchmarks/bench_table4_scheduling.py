@@ -1,0 +1,22 @@
+"""Paper Table 4 analogue. The paper studies OpenMP static vs dynamic
+scheduling for SSSP; TPU has no thread scheduler, so the analogous
+load-balance lever is push (scatter-min) vs pull (gather/segment-min)
+operator choice — pronounced on road (large-diameter) vs social graphs,
+exactly like the paper's US/GR observation."""
+from __future__ import annotations
+
+from repro.core import compile_bundled
+
+from .common import row, suite, timeit
+
+
+def run(graphs=None):
+    graphs = graphs or suite()
+    push = compile_bundled("sssp")
+    pull = compile_bundled("sssp_pull")
+    for gname, g in graphs.items():
+        us_push, _ = timeit(lambda: push(g, src=0))
+        us_pull, _ = timeit(lambda: pull(g, src=0))
+        row(f"table4/sssp_push/{gname}", us_push,
+            f"pull_ratio={us_pull/us_push:.2f}")
+        row(f"table4/sssp_pull/{gname}", us_pull)

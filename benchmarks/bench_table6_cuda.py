@@ -1,0 +1,52 @@
+"""Paper Table 6 analogue: the many-core ('CUDA'→Pallas) backend.
+
+On this CPU host the Pallas kernels execute in interpret mode (correctness,
+not speed), so wall-clock kernel timing is meaningless; instead this table
+reports per-kernel ROOFLINE-MODELED v5e time derived from exact per-call
+FLOPs/bytes (the same accounting as §Roofline), plus measured wall time of
+the whole DSL pallas-backend program under XLA:CPU as an end-to-end sanity
+check against the local backend (paper's generated-vs-library structure)."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import compile_bundled
+from repro.graph.csr import to_ell
+from repro.launch.roofline import HBM_BW, PEAK_FLOPS
+
+from .common import row, suite, timeit
+
+
+def _kernel_model_us(g, kind):
+    """Roofline-modeled per-sweep time on one v5e chip."""
+    ell = to_ell(g, reverse=True)
+    n, d = ell.cols.shape
+    if kind in ("relax", "gather"):
+        flops = 2.0 * n * d                      # add+min (or mul+add) per slot
+        byts = (n * d * 8                        # cols + vals tiles (int32)
+                + n * 4 * 2 + (n + 1) * 4)       # x gathered + y out
+        return max(flops / PEAK_FLOPS, byts / HBM_BW) * 1e6
+    if kind == "tc":
+        nb = -(-g.num_nodes // 128) * 128
+        flops = 2.0 * nb ** 3 + nb * nb          # A·A + mask-reduce
+        byts = 3 * nb * nb * 4 * (nb // 128)
+        return max(flops / PEAK_FLOPS, byts / HBM_BW) * 1e6
+    raise ValueError(kind)
+
+
+def run(graphs=None):
+    graphs = graphs or suite()
+    for gname, g in graphs.items():
+        # end-to-end generated pallas-backend program (interpret kernels)
+        prog_p = compile_bundled("sssp", backend="pallas")
+        prog_l = compile_bundled("sssp", backend="local")
+        us_p, out_p = timeit(lambda: prog_p(g, src=0), reps=2)
+        us_l, out_l = timeit(lambda: prog_l(g, src=0), reps=2)
+        assert np.array_equal(np.asarray(out_p["dist"]), np.asarray(out_l["dist"]))
+        row(f"table6/sssp_pallas_e2e/{gname}", us_p,
+            f"modeled_v5e_per_sweep_us={_kernel_model_us(g, 'relax'):.1f}")
+        row(f"table6/pr_gather_model/{gname}", _kernel_model_us(g, "gather"),
+            "roofline-modeled v5e per sweep")
+        if g.num_nodes <= 4096:
+            row(f"table6/tc_mxu_model/{gname}", _kernel_model_us(g, "tc"),
+                "roofline-modeled v5e dense MXU count")

@@ -1,0 +1,43 @@
+"""Benchmark utilities: timing, CSV rows, scaled-down Table-2 suite."""
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+from repro.graph import load_suite
+
+ROWS = []
+
+
+def timeit(fn, *args, reps=3, warmup=1, **kw):
+    for _ in range(warmup):
+        out = fn(*args, **kw)
+        jax.block_until_ready(out)
+    ts = []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        out = fn(*args, **kw)
+        jax.block_until_ready(out)
+        ts.append(time.perf_counter() - t0)
+    return min(ts) * 1e6, out      # µs
+
+
+def row(name, us, derived=""):
+    ROWS.append((name, us, derived))
+    print(f"{name},{us:.1f},{derived}")
+
+
+def header():
+    print("name,us_per_call,derived")
+
+
+_SUITE = None
+
+
+def suite():
+    global _SUITE
+    if _SUITE is None:
+        _SUITE = load_suite()
+    return _SUITE

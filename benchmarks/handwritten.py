@@ -1,0 +1,88 @@
+"""Hand-crafted JAX baselines — the 'library code' the paper compares its
+generated code against (Galois/Ligra/Gunrock role). Written directly against
+jax.numpy with no DSL involvement; the benchmark tables report
+generated-vs-handwritten ratios exactly like the paper's Tables 3/5/6."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.graph.csr import CSRGraph, INF_I32
+
+
+@jax.jit
+def sssp_handwritten(g: CSRGraph, src) -> jax.Array:
+    n = g.num_nodes
+    dist0 = jnp.full((n,), INF_I32, jnp.int32).at[src].set(0)
+
+    def cond(state):
+        return state[1]
+
+    def body(state):
+        dist, _ = state
+        cand = dist[g.edge_src] + g.weights
+        new = dist.at[g.indices].min(cand)
+        return new, jnp.any(new < dist)
+
+    dist, _ = jax.lax.while_loop(cond, body, (dist0, jnp.bool_(True)))
+    return dist
+
+
+@jax.jit
+def pagerank_handwritten(g: CSRGraph, delta=0.85, beta=1e-4, max_iter=100):
+    n = g.num_nodes
+    deg = jnp.maximum(g.out_degree, 1)
+
+    def cond(state):
+        pr, diff, it, first = state
+        return first | ((diff > beta) & (it < max_iter))
+
+    def body(state):
+        pr, _, it, _ = state
+        contrib = pr / deg
+        s = jax.ops.segment_sum(contrib[g.rev_indices], g.rev_edge_dst,
+                                num_segments=n, indices_are_sorted=True)
+        val = (1 - delta) / n + delta * s
+        return val, jnp.sum(jnp.abs(val - pr)), it + 1, jnp.bool_(False)
+
+    pr, _, _, _ = jax.lax.while_loop(
+        cond, body, (jnp.full((n,), 1.0 / n), jnp.float32(0), jnp.int32(0),
+                     jnp.bool_(True)))
+    return pr
+
+
+@jax.jit
+def tc_handwritten(g: CSRGraph) -> jax.Array:
+    from repro.core.runtime import wedge_count
+    return wedge_count(g)           # same wedge semantics as Fig. 20
+
+
+def bc_handwritten(g: CSRGraph, sources) -> jax.Array:
+    from repro.core.runtime import bfs_levels, segment_sum
+    n = g.num_nodes
+
+    @jax.jit
+    def one_source(src):
+        level, depth = bfs_levels(g, src)
+        sigma0 = jnp.zeros((n,), jnp.float32).at[src].set(1.0)
+
+        def fwd(l, sigma):
+            em = (level[g.edge_src] == l) & (level[g.indices] == l + 1)
+            return sigma + segment_sum(jnp.where(em, sigma[g.edge_src], 0.0),
+                                       g.indices, n, sorted_ids=False)
+        sigma = jax.lax.fori_loop(0, depth - 1, fwd, sigma0)
+
+        def bwd(k, delta):
+            l = depth - 2 - k
+            em = (level[g.edge_src] == l) & (level[g.indices] == l + 1)
+            contrib = jnp.where(
+                em, sigma[g.edge_src] / jnp.maximum(sigma[g.indices], 1e-9)
+                * (1.0 + delta[g.indices]), 0.0)
+            return delta + segment_sum(contrib, g.edge_src, n)
+        delta = jax.lax.fori_loop(0, depth - 1, bwd, jnp.zeros((n,), jnp.float32))
+        return jnp.where((level >= 0) & (jnp.arange(n) != src), delta, 0.0)
+
+    bc = jnp.zeros((n,), jnp.float32)
+    for s in sources:
+        bc = bc + one_source(jnp.int32(s))
+    return bc

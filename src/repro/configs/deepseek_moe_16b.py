@@ -1,0 +1,10 @@
+"""deepseek-moe-16b — fine-grained MoE, 2 shared + 64 routed top-6 [arXiv:2401.06066]."""
+from .base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="deepseek-moe-16b", family="moe",
+    n_layers=28, d_model=2048, n_heads=16, n_kv_heads=16,
+    d_ff=1408, vocab=102_400, head_dim=128,
+    n_experts=64, n_shared_experts=2, moe_top_k=6,
+    notes="fine-grained experts; shared experts always active",
+)

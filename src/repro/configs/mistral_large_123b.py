@@ -1,0 +1,10 @@
+"""mistral-large-123b — dense GQA [hf:mistralai/Mistral-Large-Instruct-2407; unverified]."""
+from .base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="mistral-large-123b", family="dense",
+    n_layers=88, d_model=12288, n_heads=96, n_kv_heads=8,
+    d_ff=28672, vocab=32_768, head_dim=128,
+    rope_theta=1_000_000.0,
+    notes="large-N sharding stressor",
+)

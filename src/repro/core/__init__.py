@@ -1,0 +1,10 @@
+"""StarPlat DSL compiler — the paper's primary contribution.
+
+Frontend: lexer → parser → AST (§2.4) → semantic analysis → IR.
+Backends:  local (OpenMP analogue), distributed (MPI analogue, shard_map),
+           pallas (CUDA analogue, TPU kernels).
+"""
+from .api import CompiledProgram, compile_bundled, compile_program, load_program_source
+
+__all__ = ["CompiledProgram", "compile_bundled", "compile_program",
+           "load_program_source"]

@@ -1,0 +1,105 @@
+"""Public compiler API: StarPlat source → executable JAX program.
+
+    prog = compile_program(source, backend="local")
+    out  = prog(g, src=0)           # jitted
+    print(prog.source)              # generated Python/JAX text
+"""
+from __future__ import annotations
+
+import os
+from dataclasses import dataclass
+from typing import Callable, Optional
+
+import jax
+
+from . import runtime as rt
+from .lowering import lower
+from .parser import parse
+
+_PROGRAM_DIR = os.path.join(os.path.dirname(__file__), "programs")
+
+_PRELUDE = (
+    "import jax\n"
+    "import jax.numpy as jnp\n"
+    "from repro.core import runtime as rt\n\n"
+)
+
+
+@dataclass
+class CompiledProgram:
+    name: str
+    backend: str
+    source: str          # generated Python/JAX source text
+    fn: Callable         # compiled callable (jit according to backend)
+    raw_fn: Callable     # un-jitted generated function
+    ir: object
+
+    def __call__(self, *args, **kwargs):
+        return self.fn(*args, **kwargs)
+
+
+def _exec_generated(src: str, fn_name: str, extra_env: Optional[dict] = None):
+    import jax.numpy as jnp
+    env = {"jax": jax, "jnp": jnp, "rt": rt}
+    if extra_env:
+        env.update(extra_env)
+    code = compile(src, f"<starplat:{fn_name}>", "exec")
+    exec(code, env)
+    return env[fn_name]
+
+
+def compile_program(source: str, backend: str = "local", fn_name: Optional[str] = None,
+                    jit: bool = True, **backend_opts) -> CompiledProgram:
+    prog = parse(source)
+    irfns = lower(prog)
+    if fn_name is None:
+        irfn = irfns[0]
+    else:
+        irfn = next(f for f in irfns if f.name == fn_name)
+
+    if backend == "local":
+        from .codegen.local_jax import generate_local
+        body = generate_local(irfn)
+        extra_env = None
+    elif backend == "distributed":
+        from .codegen.distributed import generate_distributed
+        body, extra_env = generate_distributed(irfn, **backend_opts)
+    elif backend == "pallas":
+        from .codegen.pallas_backend import generate_pallas
+        body, extra_env = generate_pallas(irfn, **backend_opts)
+    else:
+        raise ValueError(f"unknown backend {backend!r}")
+
+    src = _PRELUDE + body
+    raw = _exec_generated(src, irfn.name, extra_env)
+    # CSRGraph is a registered pytree with static num_nodes/num_edges metadata,
+    # so the graph argument is dynamic (arrays) + static (sizes) automatically.
+    if backend == "pallas":
+        from ..kernels.ell_spmv.ops import prepare_ell
+        jitted = jax.jit(raw) if jit else raw
+        _ell_cache = {}
+
+        def fn(g, **kw):
+            key = id(g)
+            if key not in _ell_cache:
+                cols, wts, _ = prepare_ell(g, reverse=True)
+                _ell_cache[key] = (g, cols, wts)   # keep g alive with its ELL
+            _, cols, wts = _ell_cache[key]
+            return jitted(g, cols, wts, **kw)
+    else:
+        fn = jax.jit(raw) if jit and backend == "local" else raw
+    prog = CompiledProgram(name=irfn.name, backend=backend, source=src,
+                           fn=fn, raw_fn=raw, ir=irfn)
+    if extra_env and "__dist_meta__" in extra_env:
+        prog.dist_meta = extra_env["__dist_meta__"]
+    return prog
+
+
+def load_program_source(name: str) -> str:
+    """Bundled paper programs: sssp, sssp_pull, pr, tc, bc."""
+    with open(os.path.join(_PROGRAM_DIR, f"{name}.sp")) as f:
+        return f.read()
+
+
+def compile_bundled(name: str, backend: str = "local", **kw) -> CompiledProgram:
+    return compile_program(load_program_source(name), backend=backend, **kw)

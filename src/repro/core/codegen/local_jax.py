@@ -1,0 +1,493 @@
+"""Local (single-device) backend — the paper's OpenMP code generator, on XLA.
+
+`forall` over vertices → whole-array ops with boolean-mask predication;
+neighbor loops → CSR edge-array ops; reductions → segment/scatter combines;
+`fixedPoint` → `jax.lax.while_loop` with an on-device OR-reduction flag (the
+paper's "memory optimization in OR-reduction", §4.3, without any transfer);
+the Min/Max construct → deterministic scatter-min (the paper's CAS atomics,
+§3.6, resolved structurally).
+"""
+from __future__ import annotations
+
+from typing import List, Optional
+
+from .. import ir as I
+from ..ir import written_vars
+from .base import (BFSCtx, CodegenError, EdgeCtx, Emitter, ExprEmitter,
+                   HostCtx, VertexCtx, ctx_chain)
+
+_JNP_DTYPE = {"int32": "jnp.int32", "bool": "jnp.bool_",
+              "float32": "jnp.float32", "float64": "jnp.float32"}
+# float64 → float32: x64 is disabled on TPU; sigma counts fit f32 for our sizes.
+
+_RED = {"+": "+", "-": "-", "*": "*", "/": "/", "&&": "&", "||": "|"}
+
+
+class LocalCodegen:
+    backend_name = "local"
+    VLEN = "N"
+
+    def __init__(self, irfn: I.IRFunction):
+        self.f = irfn
+        self.em = Emitter()
+        self.ex = ExprEmitter(irfn, graph_var=irfn.graph_param)
+        self.declared: List[str] = []      # ordered mutable host-scope vars
+        self.dtypes = {}
+        self.write_alias = {}              # fixedPoint redirects
+
+    # ------------------------------------------------------------------ utils
+    def dtype_of(self, name: str) -> Optional[str]:
+        return self.dtypes.get(name)
+
+    def jdt(self, dtype: str) -> str:
+        return _JNP_DTYPE[dtype]
+
+    def declare(self, name: str, dtype: str):
+        if name not in self.declared:
+            self.declared.append(name)
+        self.dtypes[name] = dtype
+
+    def wtarget(self, prop: str) -> str:
+        return self.write_alias.get(prop, prop)
+
+    def carries(self, body) -> List[str]:
+        wr = written_vars(body)
+        return [v for v in self.declared if v in wr]
+
+    # ------------------------------------------------------------------ entry
+    def generate(self) -> str:
+        f, em = self.f, self.em
+        g = f.graph_param
+        args = [p.name for p in f.params]
+        # non-graph prop params may be passed as None (re-initialized inside)
+        sig = ", ".join([args[0]] + [f"{a}=None" for a in args[1:]])
+        em.w(f"def {f.name}({sig}):")
+        with em.block():
+            em.w(f"N = {g}.num_nodes")
+            em.w("_vids = jnp.arange(N, dtype=jnp.int32)")
+            for p in f.params:
+                if p.kind == "prop_node":
+                    self.declare(p.name, p.dtype)
+                    em.w(f"if {p.name} is None:")
+                    with em.block():
+                        em.w(f"{p.name} = rt.init_prop(N, {self.jdt(p.dtype)!s})")
+                elif p.kind == "scalar":
+                    self.dtypes[p.name] = p.dtype
+            for s in f.body:
+                self.stmt(s, HostCtx())
+            rets = ", ".join(f"'{v}': {v}" for v in self.declared)
+            em.w(f"return {{{rets}}}")
+        return em.source()
+
+    # ------------------------------------------------------------------ stmts
+    def stmt(self, s: I.IRStmt, ctx):
+        m = getattr(self, f"s_{type(s).__name__}", None)
+        if m is None:
+            raise CodegenError(f"{self.backend_name}: unhandled {type(s).__name__}")
+        m(s, ctx)
+
+    def body(self, stmts, ctx):
+        for s in stmts:
+            self.stmt(s, ctx)
+
+    # ---- host-level -----------------------------------------------------------
+    def s_IAttach(self, s: I.IAttach, ctx):
+        if s.kind != "node":
+            raise CodegenError("edge properties not yet supported in codegen")
+        for prop, dtype, init in s.props:
+            self.declare(prop, dtype)
+            if init is None:
+                self.em.w(f"{prop} = rt.init_prop(N, {self.jdt(dtype)})")
+            elif isinstance(init, I.IConst) and init.kind == "inf":
+                self.em.w(f"{prop} = rt.init_prop(N, {self.jdt(dtype)}, rt.inf_for({self.jdt(dtype)}))")
+            else:
+                self.em.w(f"{prop} = rt.init_prop(N, {self.jdt(dtype)}, {self.ex.expr(init, ctx)})")
+
+    def s_IDeclScalar(self, s: I.IDeclScalar, ctx):
+        em = self.em
+        if s.vertex_local:
+            if s.init is None or isinstance(s.init, I.IConst):
+                init = "0" if s.init is None else self.ex.expr(s.init, ctx)
+                em.w(f"{s.name} = jnp.full(({self.VLEN},), {init}, {self.jdt(s.dtype)})")
+            else:
+                em.w(f"{s.name} = ({self.ex.expr(s.init, ctx)}) * jnp.ones(({self.VLEN},), {self.jdt(s.dtype)})")
+            self.dtypes[s.name] = s.dtype
+            return
+        init = self.ex.expr(s.init, ctx) if s.init is not None else "0"
+        em.w(f"{s.name} = jnp.asarray({init}, {self.jdt(s.dtype)})")
+        self.declare(s.name, s.dtype)
+
+    def s_ICopyProp(self, s: I.ICopyProp, ctx):
+        self.em.w(f"{self.wtarget(s.dst)} = {s.src}")
+
+    def s_IWriteProp(self, s: I.IWriteProp, ctx):
+        node = self.ex.expr(s.node, ctx)
+        val = self.ex.expr(s.expr, ctx)
+        p = self.wtarget(s.prop)
+        self.em.w(f"{p} = {p}.at[{node}].set({val})")
+
+    def s_IAssign(self, s: I.IAssign, ctx):
+        em = self.em
+        e = self.ex.expr(s.expr, ctx)
+        dt = self.dtype_of(s.name)
+        cast = (lambda x: f"jnp.asarray({x}, {self.jdt(dt)})") if dt else (lambda x: x)
+        vctx = self._vertex_ctx(ctx)
+        ectx = self._edge_ctx(ctx)
+        if s.reduce_op is None:
+            if s.vertex_local:
+                if vctx is not None and vctx.mask:
+                    em.w(f"{s.name} = jnp.where({vctx.mask}, {e}, {s.name})")
+                else:
+                    em.w(f"{s.name} = {e}")
+            else:
+                em.w(f"{s.name} = {cast(e)}")
+            return
+        op = _RED[s.reduce_op]
+        if s.vertex_local:
+            if ectx is not None:
+                # per-vertex accumulation over the neighborhood → segment op
+                masked = f"jnp.where({ectx.mask}, {e}, 0)" if ectx.mask else e
+                em.w(f"{s.name} = {s.name} {op} rt.segment_sum({masked}, {ectx.seg}, {self.VLEN}, sorted_ids={ectx.seg_sorted})")
+            elif vctx is not None and vctx.mask:
+                em.w(f"{s.name} = jnp.where({vctx.mask}, {s.name} {op} ({e}), {s.name})")
+            else:
+                em.w(f"{s.name} = {s.name} {op} ({e})")
+            return
+        # host scalar reduction (paper Table 1) from a parallel region
+        if ectx is not None:
+            masked = f"jnp.where({ectx.mask}, {e}, 0)" if ectx.mask else e
+            em.w(f"{s.name} = {cast(f'{s.name} {op} jnp.sum({masked})')}")
+        elif vctx is not None:
+            masked = f"jnp.where({vctx.mask}, {e}, 0)" if vctx.mask else e
+            em.w(f"{s.name} = {cast(f'{s.name} {op} jnp.sum({masked})')}")
+        else:
+            em.w(f"{s.name} = {cast(f'{s.name} {op} ({e})')}")
+
+    # ---- loops ------------------------------------------------------------------
+    def _vertex_ctx(self, ctx):
+        for c in ctx_chain(ctx):
+            if isinstance(c, (VertexCtx, BFSCtx)):
+                return c
+        return None
+
+    def _edge_ctx(self, ctx):
+        for c in ctx_chain(ctx):
+            if isinstance(c, EdgeCtx):
+                return c
+        return None
+
+    def s_IVertexLoop(self, s: I.IVertexLoop, ctx):
+        em = self.em
+        mask = None
+        if s.filter is not None:
+            mask = em.uid("vm")
+            em.w(f"{mask} = {self.ex.expr(s.filter, VertexCtx(it=s.it, mask=None, parent=ctx))}")
+        vctx = VertexCtx(it=s.it, mask=mask, parent=ctx)
+        self.body(s.body, vctx)
+
+    def s_INbrLoop(self, s: I.INbrLoop, ctx):
+        em = self.em
+        g = self.f.graph_param
+        vctx = self._vertex_ctx(ctx)
+        if vctx is None:
+            raise CodegenError("neighbor loop outside a vertex context")
+        # wedge pattern (TC): nested neighbor loop over the same source
+        if self._try_wedge(s, ctx):
+            return
+        if isinstance(vctx, BFSCtx):
+            return self._bfs_nbr_loop(s, ctx, vctx)
+        if s.direction == "out":
+            ectx = EdgeCtx(it=s.it, source=s.source, direction="out",
+                           vid=f"{g}.edge_src", nid=f"{g}.indices",
+                           w=f"{g}.weights", seg=f"{g}.edge_src",
+                           seg_sorted=True, mask=None, parent=ctx)
+        else:
+            ectx = EdgeCtx(it=s.it, source=s.source, direction="in",
+                           vid=f"{g}.rev_edge_dst", nid=f"{g}.rev_indices",
+                           w=f"{g}.rev_weights", seg=f"{g}.rev_edge_dst",
+                           seg_sorted=True, mask=None, parent=ctx)
+        terms = []
+        if vctx.mask:
+            terms.append(f"{vctx.mask}[{ectx.vid}]")
+        if s.filter is not None:
+            terms.append(self.ex.expr(s.filter, ectx))
+        if terms:
+            mask = em.uid("em")
+            em.w(f"{mask} = {' & '.join(terms)}")
+            ectx.mask = mask
+        self.body(s.body, ectx)
+
+    def _bfs_nbr_loop(self, s: I.INbrLoop, ctx, bctx: BFSCtx):
+        """neighbors() inside iterateInBFS = BFS-DAG successors (paper §2.3.2)."""
+        em = self.em
+        g = self.f.graph_param
+        if s.direction != "out":
+            raise CodegenError("only neighbors() supported inside iterateInBFS")
+        ectx = EdgeCtx(it=s.it, source=s.source, direction="out",
+                       vid=f"{g}.edge_src", nid=f"{g}.indices",
+                       w=f"{g}.weights", seg=f"{g}.edge_src",
+                       seg_sorted=True, mask=None, parent=ctx)
+        terms = [f"({bctx.level}[{ectx.vid}] == {bctx.cur})",
+                 f"({bctx.level}[{ectx.nid}] == ({bctx.cur} + 1))"]
+        if bctx.mask:
+            terms.append(f"{bctx.mask}[{ectx.vid}]")
+        if s.filter is not None:
+            terms.append(self.ex.expr(s.filter, ectx))
+        mask = em.uid("em")
+        em.w(f"{mask} = {' & '.join(terms)}")
+        ectx.mask = mask
+        self.body(s.body, ectx)
+
+    # ---- in-loop writes -------------------------------------------------------
+    def s_IAssignProp(self, s: I.IAssignProp, ctx):
+        em = self.em
+        ectx = self._edge_ctx(ctx)
+        vctx = self._vertex_ctx(ctx)
+        p = self.wtarget(s.prop)
+        e = self.ex.expr(s.expr, ctx)
+        if ectx is not None:
+            if s.reduce_op is None:
+                raise CodegenError(
+                    f"unsynchronized per-edge write to {s.prop}; use a "
+                    "reduction or the Min/Max construct")
+            if s.reduce_op not in ("+", "||", "&&"):
+                raise CodegenError(f"unsupported edge reduction {s.reduce_op}")
+            masked = f"jnp.where({ectx.mask}, {e}, 0)" if ectx.mask else e
+            if s.target == s_target_source(s, ectx):
+                # pull: reduce over the neighborhood into the source vertex
+                em.w(f"{p} = {p} + rt.segment_sum({masked}, {ectx.seg}, {self.VLEN}, sorted_ids={ectx.seg_sorted})")
+            else:
+                # push: combine into the neighbor (paper: atomics; here scatter)
+                em.w(f"{p} = {p} + rt.segment_sum({masked}, {ectx.nid}, N, sorted_ids=False)")
+            return
+        if vctx is None:
+            raise CodegenError("property assignment outside any loop")
+        if s.reduce_op is None:
+            if vctx.mask:
+                em.w(f"{p} = jnp.where({vctx.mask}, {e}, {p})")
+            else:
+                # broadcast keeps scalar rhs (v.modified = True) array-shaped
+                em.w(f"{p} = jnp.broadcast_to(jnp.asarray({e}, {p}.dtype), {p}.shape)")
+        else:
+            op = _RED[s.reduce_op]
+            if vctx.mask:
+                em.w(f"{p} = jnp.where({vctx.mask}, {p} {op} ({e}), {p})")
+            else:
+                em.w(f"{p} = {p} {op} ({e})")
+
+    def s_IMinMaxUpdate(self, s: I.IMinMaxUpdate, ctx):
+        em = self.em
+        ectx = self._edge_ctx(ctx)
+        if ectx is None:
+            raise CodegenError("Min/Max update outside a neighbor loop")
+        p = self.wtarget(s.prop)
+        dtype = self.f.node_props.get(s.prop, "int32")
+        cand = self.ex.expr(s.cand, ctx)
+        cv = em.uid("cand")
+        ident = f"rt.inf_for({self.jdt(dtype)})" if s.kind == "Min" else f"-rt.inf_for({self.jdt(dtype)})"
+        if ectx.mask:
+            em.w(f"{cv} = jnp.where({ectx.mask}, {cand}, {ident})")
+        else:
+            em.w(f"{cv} = {cand}")
+        new = em.uid("new")
+        if s.target == ectx.it:        # push: update lands on the neighbor
+            fn = "rt.scatter_min" if s.kind == "Min" else "rt.scatter_max"
+            em.w(f"{new} = {fn}({s.prop}, {ectx.nid}, {cv})")
+        elif s.target == ectx.source:  # pull: reduce into the source vertex
+            fn = "rt.segment_min" if s.kind == "Min" else "rt.segment_max"
+            mm = "jnp.minimum" if s.kind == "Min" else "jnp.maximum"
+            em.w(f"{new} = {mm}({s.prop}, {fn}({cv}, {ectx.seg}, {self.VLEN}, sorted_ids={ectx.seg_sorted}))")
+        else:
+            raise CodegenError(f"Min/Max target {s.target} not an endpoint of the loop")
+        upd = em.uid("upd")
+        cmp = "<" if s.kind == "Min" else ">"
+        em.w(f"{upd} = {new} {cmp} {s.prop}")
+        em.w(f"{p} = {new}" if p == s.prop else
+             f"{p} = jnp.where({upd}, {new}, {p})")
+        for eprop, _etgt, eval_ in s.extras:
+            ep = self.wtarget(eprop)
+            ev = self.ex.expr(eval_, HostCtx())  # vertex-uniform (True/False/const)
+            em.w(f"{ep} = jnp.where({upd}, {ev}, {ep})")
+
+    # ---- control flow ------------------------------------------------------------
+    def s_IIf(self, s: I.IIf, ctx):
+        ectx = self._edge_ctx(ctx)
+        vctx = self._vertex_ctx(ctx)
+        em = self.em
+        if ectx is not None:
+            mask = em.uid("em")
+            cond = self.ex.expr(s.cond, ctx)
+            em.w(f"{mask} = {f'{ectx.mask} & ' if ectx.mask else ''}{cond}")
+            import dataclasses as _dc
+            sub = _dc.replace(ectx, mask=mask)
+            self.body(s.then, sub)
+            if s.els:
+                raise CodegenError("else in edge context unsupported")
+            return
+        if vctx is not None:
+            mask = em.uid("vm")
+            cond = self.ex.expr(s.cond, ctx)
+            em.w(f"{mask} = {f'{vctx.mask} & ' if vctx.mask else ''}{cond}")
+            import dataclasses as _dc
+            sub = _dc.replace(vctx, mask=mask)
+            self.body(s.then, sub)
+            if s.els:
+                raise CodegenError("else in vertex context unsupported")
+            return
+        raise CodegenError("host-level if unsupported (use fixedPoint/do-while)")
+
+    def s_IFixedPoint(self, s: I.IFixedPoint, ctx):
+        em = self.em
+        conv = s.conv_prop
+        self.declare(s.var, "bool")
+        em.w(f"{s.var} = jnp.asarray(False)")
+        carry = self.carries(s.body)
+        if s.var not in carry:
+            carry.append(s.var)
+        pack = ", ".join(carry)
+        n = em.uid("fp")
+        em.w(f"def {n}_cond(_state):")
+        with em.block():
+            em.w(f"({pack},) = _state" if len(carry) == 1 else f"({pack}) = _state")
+            em.w(f"return ~{s.var}")
+        em.w(f"def {n}_body(_state):")
+        with em.block():
+            em.w(f"({pack},) = _state" if len(carry) == 1 else f"({pack}) = _state")
+            em.w(f"{conv}_nxt = jnp.zeros_like({conv})")
+            saved = dict(self.write_alias)
+            self.write_alias[conv] = f"{conv}_nxt"
+            self.body(s.body, ctx)
+            self.write_alias = saved
+            em.w(f"{conv} = {conv}_nxt")
+            self.emit_finished(s.var, conv)
+            em.w(f"return ({pack},)" if len(carry) == 1 else f"return ({pack})")
+        em.w(f"_state = jax.lax.while_loop({n}_cond, {n}_body, ({pack},))"
+             if len(carry) == 1 else
+             f"_state = jax.lax.while_loop({n}_cond, {n}_body, ({pack}))")
+        em.w(f"({pack},) = _state" if len(carry) == 1 else f"({pack}) = _state")
+
+    def emit_finished(self, var: str, conv: str):
+        self.em.w(f"{var} = ~jnp.any({conv})")
+
+    def s_IDoWhile(self, s: I.IDoWhile, ctx):
+        em = self.em
+        carry = self.carries(s.body)
+        pack = ", ".join(carry)
+        n = em.uid("dw")
+        first = f"{n}_first"
+        em.w(f"def {n}_cond(_state):")
+        with em.block():
+            em.w(f"({first}, {pack}) = _state")
+            em.w(f"return {first} | ({self.ex.expr(s.cond, ctx)})")
+        em.w(f"def {n}_body(_state):")
+        with em.block():
+            em.w(f"({first}, {pack}) = _state")
+            self.body(s.body, ctx)
+            em.w(f"return (jnp.asarray(False), {pack})")
+        em.w(f"_state = jax.lax.while_loop({n}_cond, {n}_body, (jnp.asarray(True), {pack}))")
+        em.w(f"({first}, {pack}) = _state")
+
+    def s_IWhile(self, s: I.IWhile, ctx):
+        em = self.em
+        carry = self.carries(s.body)
+        pack = ", ".join(carry)
+        n = em.uid("wl")
+        em.w(f"def {n}_cond(_state):")
+        with em.block():
+            em.w(f"({pack},) = _state" if len(carry) == 1 else f"({pack}) = _state")
+            em.w(f"return {self.ex.expr(s.cond, ctx)}")
+        em.w(f"def {n}_body(_state):")
+        with em.block():
+            em.w(f"({pack},) = _state" if len(carry) == 1 else f"({pack}) = _state")
+            self.body(s.body, ctx)
+            em.w(f"return ({pack},)" if len(carry) == 1 else f"return ({pack})")
+        em.w(f"_state = jax.lax.while_loop({n}_cond, {n}_body, ({pack}{',' if len(carry) == 1 else ''}))")
+        em.w(f"({pack},) = _state" if len(carry) == 1 else f"({pack}) = _state")
+
+    def s_ISetLoop(self, s: I.ISetLoop, ctx):
+        em = self.em
+        carry = self.carries(s.body)
+        pack = ", ".join(carry)
+        n = em.uid("set")
+        mark = len(self.declared)
+        em.w(f"def {n}_body(_i, _carry):")
+        with em.block():
+            em.w(f"({pack},) = _carry" if len(carry) == 1 else f"({pack}) = _carry")
+            em.w(f"{s.it} = {s.set_name}[_i]")
+            hctx = HostCtx()
+            hctx.node_bindings[s.it] = s.it
+            self.body(s.body, hctx)
+            em.w(f"return ({pack},)" if len(carry) == 1 else f"return ({pack})")
+        del self.declared[mark:]   # loop-local props don't escape
+        em.w(f"_carry = jax.lax.fori_loop(0, {s.set_name}.shape[0], {n}_body, ({pack}{',' if len(carry) == 1 else ''}))")
+        em.w(f"({pack},) = _carry" if len(carry) == 1 else f"({pack}) = _carry")
+
+    def s_IBFS(self, s: I.IBFS, ctx):
+        em = self.em
+        g = self.f.graph_param
+        root = self.ex.expr(s.root, ctx)
+        lvl = em.uid("level")
+        dep = em.uid("depth")
+        em.w(f"{lvl}, {dep} = rt.bfs_levels({g}, {root})")
+        # forward pass: level-synchronous over the BFS DAG
+        carry = self.carries(s.body)
+        pack = ", ".join(carry)
+        n = em.uid("bfsf")
+        em.w(f"def {n}(_l, _carry):")
+        with em.block():
+            em.w(f"({pack},) = _carry" if len(carry) == 1 else f"({pack}) = _carry")
+            bctx = BFSCtx(it=s.it, level=lvl, cur="_l", mask=None, parent=ctx)
+            self.body(s.body, bctx)
+            em.w(f"return ({pack},)" if len(carry) == 1 else f"return ({pack})")
+        em.w(f"_carry = jax.lax.fori_loop(0, {dep} - 1, {n}, ({pack}{',' if len(carry) == 1 else ''}))")
+        em.w(f"({pack},) = _carry" if len(carry) == 1 else f"({pack}) = _carry")
+        if s.rev_body is None:
+            return
+        # reverse pass: levels from deepest-1 down to 0
+        carry = self.carries(s.rev_body)
+        pack = ", ".join(carry)
+        n = em.uid("bfsr")
+        em.w(f"def {n}(_k, _carry):")
+        with em.block():
+            em.w(f"({pack},) = _carry" if len(carry) == 1 else f"({pack}) = _carry")
+            em.w(f"_l = {dep} - 2 - _k")
+            vm = em.uid("vm")
+            em.w(f"{vm} = ({lvl} == _l)")
+            bctx = BFSCtx(it=s.it, level=lvl, cur="_l", mask=vm, parent=ctx)
+            if s.rev_filter is not None:
+                em.w(f"{vm} = {vm} & ({self.ex.expr(s.rev_filter, bctx)})")
+            self.body(s.rev_body, bctx)
+            em.w(f"return ({pack},)" if len(carry) == 1 else f"return ({pack})")
+        em.w(f"_carry = jax.lax.fori_loop(0, {dep} - 1, {n}, ({pack}{',' if len(carry) == 1 else ''}))")
+        em.w(f"({pack},) = _carry" if len(carry) == 1 else f"({pack}) = _carry")
+
+    def s_IReturn(self, s: I.IReturn, ctx):
+        pass  # outputs are returned as the property/scalar dict
+
+    # ---- wedge (TC) pattern ------------------------------------------------------
+    def _try_wedge(self, s: I.INbrLoop, ctx) -> bool:
+        inner = s.body[0] if len(s.body) == 1 and isinstance(s.body[0], I.INbrLoop) else None
+        if inner is None or inner.source != s.source or s.direction != "out" \
+                or inner.direction != "out":
+            return False
+        iff = inner.body[0] if len(inner.body) == 1 and isinstance(inner.body[0], I.IIf) else None
+        if iff is None or not isinstance(iff.cond, I.ICall) or iff.cond.fn != "is_an_edge":
+            raise CodegenError("nested same-source neighbor loops support only "
+                               "the is_an_edge counting pattern (paper Fig. 20)")
+        red = iff.then[0] if len(iff.then) == 1 and isinstance(iff.then[0], I.IAssign) else None
+        if red is None or red.reduce_op != "+":
+            raise CodegenError("wedge body must be a count reduction")
+        g = self.f.graph_param
+        dt = self.dtype_of(red.name)
+        acc = f"{red.name} + rt.wedge_count({g}) * ({self.ex.expr(red.expr, HostCtx())})"
+        self.em.w(f"{red.name} = jnp.asarray({acc}, {self.jdt(dt)})" if dt else
+                  f"{red.name} = {acc}")
+        return True
+
+
+def s_target_source(s: I.IAssignProp, ectx) -> str:
+    return ectx.source
+
+
+def generate_local(irfn: I.IRFunction) -> str:
+    return LocalCodegen(irfn).generate()

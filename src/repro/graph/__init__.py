@@ -1,0 +1,10 @@
+from .csr import CSRGraph, EllGraph, from_edges, to_dense, to_ell, pad_nodes, INF_I32
+from .generators import uniform_random, rmat, road, small_world, powerlaw_social, load_suite, SUITE
+from . import algorithms_ref, io, partition
+
+__all__ = [
+    "CSRGraph", "EllGraph", "from_edges", "to_dense", "to_ell", "pad_nodes",
+    "INF_I32", "uniform_random", "rmat", "road", "small_world",
+    "powerlaw_social", "load_suite", "SUITE", "algorithms_ref", "io",
+    "partition",
+]

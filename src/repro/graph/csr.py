@@ -1,0 +1,188 @@
+"""CSR graph representation — the storage format the paper standardizes on (§3.1).
+
+The paper chose CSR because it (a) works across all backends, (b) suits
+vertex-centric algorithms, and (c) splits easily for distribution. All three
+hold on TPU, with one adaptation: TPU kernels want *rectangular* tiles, so we
+additionally materialize a block-ELL view (padded neighbor lists) for the
+Pallas backend, and we keep an explicit per-edge source array (`edge_src`)
+so edge-parallel ops are a gather, not a searchsorted.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+INF_I32 = np.int32(2**30)  # "infinity" that survives + weight without overflow
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class CSRGraph:
+    """Static graph in CSR (out-edges) + CSC (in-edges) form.
+
+    Matches the paper's Graph type: `indptr/indices` are
+    `indexofNodes/edgeList`; `rev_*` is the transpose CSR the paper keeps
+    for `nodesTo()` (needed by PR-pull and BC).
+    """
+
+    # --- out-CSR ---
+    indptr: jax.Array      # int32[N+1]
+    indices: jax.Array     # int32[E]   destination of each out-edge
+    weights: jax.Array     # int32[E]   edge weights (SSSP); ones if unweighted
+    edge_src: jax.Array    # int32[E]   source of each out-edge (expanded rows)
+    # --- in-CSR (transpose) ---
+    rev_indptr: jax.Array  # int32[N+1]
+    rev_indices: jax.Array # int32[E]   source of each in-edge
+    rev_weights: jax.Array # int32[E]
+    rev_edge_dst: jax.Array# int32[E]   destination of each in-edge (expanded rows)
+    # --- degrees ---
+    out_degree: jax.Array  # int32[N]
+    in_degree: jax.Array   # int32[N]
+    # --- static metadata ---
+    num_nodes: int = dataclasses.field(metadata=dict(static=True))
+    num_edges: int = dataclasses.field(metadata=dict(static=True))
+    max_out_degree: int = dataclasses.field(default=1, metadata=dict(static=True))
+    max_in_degree: int = dataclasses.field(default=1, metadata=dict(static=True))
+
+    def num_nodes_(self) -> int:
+        return self.num_nodes
+
+    # Paper library functions -------------------------------------------------
+    def count_outNbrs(self) -> jax.Array:
+        return self.out_degree
+
+    def minWt(self) -> jax.Array:
+        return jnp.min(self.weights)
+
+    def maxWt(self) -> jax.Array:
+        return jnp.max(self.weights)
+
+
+def _build_csr(n: int, src: np.ndarray, dst: np.ndarray, w: np.ndarray):
+    order = np.lexsort((dst, src))
+    src, dst, w = src[order], dst[order], w[order]
+    indptr = np.zeros(n + 1, np.int64)
+    np.add.at(indptr, src + 1, 1)
+    indptr = np.cumsum(indptr)
+    return indptr.astype(np.int32), dst.astype(np.int32), w.astype(np.int32), src.astype(np.int32)
+
+
+def from_edges(
+    n: int,
+    src: np.ndarray,
+    dst: np.ndarray,
+    weights: Optional[np.ndarray] = None,
+    *,
+    undirected: bool = False,
+    dedup: bool = True,
+    drop_self_loops: bool = False,
+) -> CSRGraph:
+    """Build a CSRGraph (host-side numpy; the result is a device pytree)."""
+    src = np.asarray(src, np.int64)
+    dst = np.asarray(dst, np.int64)
+    if weights is None:
+        w = np.ones_like(src)
+    else:
+        w = np.asarray(weights, np.int64)
+    if undirected:
+        src, dst, w = np.concatenate([src, dst]), np.concatenate([dst, src]), np.concatenate([w, w])
+    if drop_self_loops:
+        keep = src != dst
+        src, dst, w = src[keep], dst[keep], w[keep]
+    if dedup and len(src):
+        key = src * np.int64(n) + dst
+        _, first = np.unique(key, return_index=True)
+        src, dst, w = src[first], dst[first], w[first]
+    e = len(src)
+    indptr, indices, w_s, edge_src = _build_csr(n, src, dst, w)
+    rev_indptr, rev_indices, rev_w, rev_edge_dst = _build_csr(n, dst, src, w)
+    out_deg = np.diff(indptr).astype(np.int32)
+    in_deg = np.diff(rev_indptr).astype(np.int32)
+    return CSRGraph(
+        indptr=jnp.asarray(indptr),
+        indices=jnp.asarray(indices),
+        weights=jnp.asarray(w_s),
+        edge_src=jnp.asarray(edge_src),
+        rev_indptr=jnp.asarray(rev_indptr),
+        rev_indices=jnp.asarray(rev_indices),
+        rev_weights=jnp.asarray(rev_w),
+        rev_edge_dst=jnp.asarray(rev_edge_dst),
+        out_degree=jnp.asarray(out_deg),
+        in_degree=jnp.asarray(in_deg),
+        num_nodes=int(n),
+        num_edges=int(e),
+        max_out_degree=int(out_deg.max(initial=1)),
+        max_in_degree=int(in_deg.max(initial=1)),
+    )
+
+
+def to_dense(g: CSRGraph, dtype=jnp.float32) -> jax.Array:
+    """Dense adjacency (small graphs only — tests + the TC matmul path)."""
+    a = jnp.zeros((g.num_nodes, g.num_nodes), dtype)
+    return a.at[g.edge_src, g.indices].set(1)
+
+
+# --- block-ELL view (Pallas backend) ----------------------------------------
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class EllGraph:
+    """Padded neighbor-list (ELL) view: rectangular, so a TPU kernel can tile it.
+
+    cols[i, k] = k-th out-neighbor of i (or `n` for padding);
+    wts [i, k] = its weight (or INF for padding).
+    Rows are padded to `max_deg` rounded up to a multiple of 8 so the
+    (row_block × deg_block) tiles line up with the 8×128 VPU lanes.
+    """
+
+    cols: jax.Array  # int32[N, D]
+    wts: jax.Array   # int32[N, D]
+    num_nodes: int = dataclasses.field(metadata=dict(static=True))
+    max_deg: int = dataclasses.field(metadata=dict(static=True))
+
+
+def _round_up(x: int, m: int) -> int:
+    return (x + m - 1) // m * m
+
+
+def to_ell(g: CSRGraph, *, reverse: bool = False, pad_to: int = 8) -> EllGraph:
+    indptr = np.asarray(g.rev_indptr if reverse else g.indptr)
+    indices = np.asarray(g.rev_indices if reverse else g.indices)
+    wts = np.asarray(g.rev_weights if reverse else g.weights)
+    n = g.num_nodes
+    deg = np.diff(indptr)
+    d = max(int(deg.max()) if n else 0, 1)
+    d = _round_up(d, pad_to)
+    cols = np.full((n, d), n, np.int32)          # n == "no neighbor" sentinel
+    w = np.full((n, d), int(INF_I32), np.int32)
+    for i in range(n):
+        s, e = indptr[i], indptr[i + 1]
+        cols[i, : e - s] = indices[s:e]
+        w[i, : e - s] = wts[s:e]
+    return EllGraph(cols=jnp.asarray(cols), wts=jnp.asarray(w), num_nodes=n, max_deg=d)
+
+
+def pad_nodes(g: CSRGraph, multiple: int) -> CSRGraph:
+    """Pad to a node-count multiple (the paper pads the last MPI shard; we pad
+    so every device shard has identical extent)."""
+    n = g.num_nodes
+    n_pad = _round_up(max(n, 1), multiple)
+    if n_pad == n:
+        return g
+    extra = n_pad - n
+    def pad_ptr(p):
+        p = np.asarray(p)
+        return jnp.asarray(np.concatenate([p, np.full(extra, p[-1], p.dtype)]))
+    return dataclasses.replace(
+        g,
+        indptr=pad_ptr(g.indptr),
+        rev_indptr=pad_ptr(g.rev_indptr),
+        out_degree=jnp.concatenate([g.out_degree, jnp.zeros(extra, jnp.int32)]),
+        in_degree=jnp.concatenate([g.in_degree, jnp.zeros(extra, jnp.int32)]),
+        num_nodes=n_pad,
+    )

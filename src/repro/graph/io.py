@@ -1,0 +1,40 @@
+"""Edge-list I/O — the paper's graph loader (§3.1) reads edge lists into CSR."""
+from __future__ import annotations
+
+import numpy as np
+
+from .csr import CSRGraph, from_edges
+
+
+def load_edgelist(path: str, *, undirected: bool = False,
+                  weighted: bool | None = None) -> CSRGraph:
+    """Load `src dst [weight]` lines (comments with #/%%) into a CSRGraph."""
+    src, dst, wts = [], [], []
+    with open(path) as f:
+        for line in f:
+            line = line.strip()
+            if not line or line[0] in "#%":
+                continue
+            parts = line.split()
+            src.append(int(parts[0]))
+            dst.append(int(parts[1]))
+            if len(parts) > 2:
+                wts.append(int(float(parts[2])))
+    src = np.asarray(src, np.int64)
+    dst = np.asarray(dst, np.int64)
+    if weighted is None:
+        weighted = len(wts) == len(src) and len(wts) > 0
+    w = np.asarray(wts, np.int64) if weighted else None
+    n = int(max(src.max(initial=-1), dst.max(initial=-1)) + 1)
+    return from_edges(n, src, dst, w, undirected=undirected)
+
+
+def save_edgelist(g: CSRGraph, path: str) -> None:
+    indptr = np.asarray(g.indptr)
+    indices = np.asarray(g.indices)
+    weights = np.asarray(g.weights)
+    with open(path, "w") as f:
+        f.write(f"# nodes={g.num_nodes} edges={g.num_edges}\n")
+        for v in range(g.num_nodes):
+            for e in range(indptr[v], indptr[v + 1]):
+                f.write(f"{v} {indices[e]} {weights[e]}\n")

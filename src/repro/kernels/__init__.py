@@ -1,0 +1,18 @@
+"""Pallas TPU kernels for the perf-critical compute layers.
+
+Each kernel package has:
+  kernel.py — pl.pallas_call + explicit BlockSpec VMEM tiling (TPU target)
+  ops.py    — jitted wrapper with padding/layout handling
+  ref.py    — pure-jnp oracle (tests assert_allclose against it)
+
+Kernels are validated in interpret=True mode on CPU (the kernel body runs
+under the Pallas interpreter); on a real TPU the same pallas_call lowers to
+Mosaic.
+
+Hardware adaptation note (see DESIGN.md §2): the paper's CUDA kernels use
+thread-per-vertex + atomics. TPU has neither; these kernels restructure the
+same computations as *blocked dense* operators:
+  ell_spmv        — SSSP relax / PR gather as block-ELL semiring SpMV
+  tc_matmul       — triangle counting as masked lower-triangular A·A (MXU)
+  flash_attention — blocked attention for the LM substrate (prefill shapes)
+"""

@@ -1,0 +1,77 @@
+"""Jitted wrappers: graph-level relax/gather ops on the ELL kernel.
+
+These are what the DSL's Pallas backend emits calls to. They own the
+padding/layout glue (sentinel slot, row-block padding) so the kernel itself
+stays rectangular.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ...graph.csr import CSRGraph, EllGraph, INF_I32, to_ell
+from .kernel import ell_spmv
+
+_INTERPRET = jax.default_backend() != "tpu"
+
+
+def _pad_rows(a, block):
+    n = a.shape[0]
+    pad = (-n) % block
+    if pad == 0:
+        return a
+    fill = jnp.full((pad,) + a.shape[1:], a.dtype.type(0) if a.ndim == 1 else 0, a.dtype)
+    return jnp.concatenate([a, fill], axis=0)
+
+
+def prepare_ell(g: CSRGraph, *, reverse: bool = False, block_rows: int = 256):
+    """Host-side: build the padded ELL arrays once per graph.
+
+    Returns (cols, wts, n_rows_padded). cols pad slots point at the sentinel
+    row (index n); wts pad slots are INF (masked out by the semiring)."""
+    ell = to_ell(g, reverse=reverse)
+    n = g.num_nodes
+    cols = np.asarray(ell.cols).copy()
+    wts = np.asarray(ell.wts)
+    block = min(block_rows, -(-n // 8) * 8)   # 8-aligned, capped at block_rows
+    pad = (-n) % block
+    n_pad = n + pad
+    cols[cols == n] = n_pad                   # sentinel = last slot of padded x
+    if pad:
+        cols = np.concatenate([cols, np.full((pad, cols.shape[1]), n_pad, np.int32)])
+        wts = np.concatenate([wts, np.full((pad, wts.shape[1]), int(INF_I32), np.int32)])
+    return jnp.asarray(cols), jnp.asarray(wts), block
+
+
+@partial(jax.jit, static_argnames=("block_rows",))
+def relax_minplus(cols, wts, dist, *, block_rows: int = 256):
+    """One SSSP relax sweep: dist'[v] = min(dist[v], min_in-nbr dist[u]+w).
+    `cols/wts` must be the REVERSE (in-edge) ELL view; sentinel slot added
+    here (x[n] = INF so pad contributions never win... pad wts are INF and
+    INF+INF would overflow, so the sentinel x is 0 and pad wts carry INF)."""
+    n = dist.shape[0]
+    n_pad = cols.shape[0]
+    block_rows = min(block_rows, n_pad)   # prepare_ell guarantees divisibility
+    # padded slots + the sentinel hold 0 — never read as real neighbors,
+    # and 0 keeps INF(pad weight) + x from overflowing int32.
+    x = jnp.zeros((n_pad + 1,), dist.dtype).at[:n].set(dist)
+    y = ell_spmv(cols, wts, x, semiring="minplus",
+                 block_rows=block_rows, interpret=_INTERPRET)
+    return jnp.minimum(dist, y[:n])
+
+
+@partial(jax.jit, static_argnames=("block_rows",))
+def gather_plustimes(cols, contrib, n_out: int = None, *, block_rows: int = 256):
+    """PR gather: y[v] = sum_{u in-nbr} contrib[u]; `contrib` already divided
+    by out-degree. cols = reverse ELL; pad slots hit the 0 sentinel."""
+    n = contrib.shape[0]
+    n_pad = cols.shape[0]
+    block_rows = min(block_rows, n_pad)
+    ones = jnp.where(cols == n_pad, 0.0, 1.0).astype(contrib.dtype)
+    x = jnp.zeros((n_pad + 1,), contrib.dtype).at[:n].set(contrib)
+    y = ell_spmv(cols, ones, x, semiring="plustimes",
+                 block_rows=block_rows, interpret=_INTERPRET)
+    return y

@@ -1,0 +1,98 @@
+"""Blocked (flash) attention Pallas kernel for the LM substrate.
+
+Online-softmax attention tiled for VMEM: grid (batch*heads, Q blocks,
+KV blocks) with KV innermost; running max/denominator/accumulator live in
+VMEM scratch across the KV sweep (initialized at kv==0, written back at the
+last block). Causal masking skips fully-masked tiles via the index map and
+applies the triangle mask on the diagonal tile.
+
+Target tiling: BQ=BK=128 aligns Q·Kᵀ and P·V with the 128×128 MXU; head_dim
+is the contraction minor dim (128 for all assigned archs).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _attn_body(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+               bq: int, bk: int, scale: float, causal: bool, n_kv: int,
+               offset: int):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    def _compute():
+        q = q_ref[0].astype(jnp.float32)            # [BQ, D]
+        k = k_ref[0].astype(jnp.float32)            # [BK, D]
+        v = v_ref[0].astype(jnp.float32)            # [BK, D]
+        s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
+        if causal:
+            # query i attends to kv position j iff j <= i + offset
+            # (offset = skv - sq aligns the query block at the cache end)
+            rows = qi * bq + offset + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+            cols = ki * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+            s = jnp.where(rows >= cols, s, NEG_INF)
+        m_prev = m_ref[...]                         # [BQ, 1]
+        m_cur = jnp.max(s, axis=1, keepdims=True)
+        m_new = jnp.maximum(m_prev, m_cur)
+        p = jnp.exp(s - m_new)                      # [BQ, BK]
+        alpha = jnp.exp(m_prev - m_new)             # [BQ, 1]
+        l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * alpha + jnp.dot(
+            p, v, preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    if causal:
+        # skip tiles strictly above the (offset) diagonal
+        pl.when(ki * bk <= qi * bq + offset + (bq - 1))(_compute)
+    else:
+        _compute()
+
+    @pl.when(ki == n_kv - 1)
+    def _final():
+        o_ref[0] = (acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "bq", "bk", "interpret"))
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True, bq: int = 128, bk: int = 128,
+                    interpret: bool = True) -> jax.Array:
+    """q: [BH, SQ, D], k/v: [BH, SKV, D] (same head count — repeat KV heads
+    for GQA before calling). Returns [BH, SQ, D] in q.dtype."""
+    bh, sq, d = q.shape
+    skv = k.shape[1]
+    bq = min(bq, sq)
+    bk = min(bk, skv)
+    assert sq % bq == 0 and skv % bk == 0
+    scale = 1.0 / (d ** 0.5)
+    grid = (bh, sq // bq, skv // bk)
+    return pl.pallas_call(
+        functools.partial(_attn_body, bq=bq, bk=bk, scale=scale,
+                          causal=causal, n_kv=skv // bk, offset=skv - sq),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bq, d), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, bk, d), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, bk, d), lambda b, i, j: (b, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, d), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, sq, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, 1), jnp.float32),    # running max
+            pltpu.VMEM((bq, 1), jnp.float32),    # running denominator
+            pltpu.VMEM((bq, d), jnp.float32),    # output accumulator
+        ],
+        interpret=interpret,
+    )(q, k, v)

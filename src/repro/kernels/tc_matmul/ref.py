@@ -1,0 +1,10 @@
+"""Pure-jnp oracle for masked lower-triangular A·A triangle counting."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def tc_matmul_ref(lower: jax.Array) -> jax.Array:
+    c = lower @ lower
+    return jnp.sum(c * lower)

@@ -1,0 +1,6 @@
+"""Launch layer: mesh construction, multi-pod dry-run, roofline analysis,
+training driver. NOTE: do not import .dryrun from here — it pins
+XLA_FLAGS device count at import and must only run as __main__."""
+from . import mesh, roofline, sharding
+
+__all__ = ["mesh", "roofline", "sharding"]

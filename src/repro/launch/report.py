@@ -1,0 +1,57 @@
+"""Render the §Roofline table (EXPERIMENTS.md) from launch_out/*.json."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from ..configs import ARCHS
+from ..configs.base import shape_cells_for
+from . import roofline
+
+
+def load_cells(out_dir: str, mesh: str = "16x16"):
+    cells = {}
+    for path in glob.glob(os.path.join(out_dir, f"*__{mesh}.json")):
+        rec = json.load(open(path))
+        cells[(rec["arch"], rec["shape"])] = rec
+    return cells
+
+
+def render_table(out_dir: str, mesh: str = "16x16") -> str:
+    cells = load_cells(out_dir, mesh)
+    lines = [
+        "| arch | shape | compute s | memory s | collective s | bottleneck |"
+        " MODEL_FLOPS | useful frac | fits/dev |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for arch, cfg in ARCHS.items():
+        for cell in shape_cells_for(cfg):
+            rec = cells.get((arch, cell.name))
+            if rec is None:
+                lines.append(f"| {arch} | {cell.name} | — | — | — | MISSING | | | |")
+                continue
+            t = rec["roofline"]
+            mf = roofline.model_flops(cfg, cell) / rec["num_devices"]
+            useful = mf / rec["flops"] if rec["flops"] else 0.0
+            temp_gib = (rec["memory"]["temp_size_in_bytes"] or 0) / 2**30
+            args_gib = (rec["memory"]["argument_size_in_bytes"] or 0) / 2**30
+            fits = "Y" if temp_gib + args_gib < 16 else f"N({temp_gib+args_gib:.0f}G)"
+            lines.append(
+                f"| {arch} | {cell.name} | {t['compute_s']:.3f} | "
+                f"{t['memory_s']:.3f} | {t['collective_s']:.3f} | "
+                f"{t['bottleneck']} | {mf:.2e} | {useful:.2f} | {fits} |")
+    return "\n".join(lines)
+
+
+def main():
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="launch_out")
+    ap.add_argument("--mesh", default="16x16")
+    args = ap.parse_args()
+    print(render_table(args.out, args.mesh))
+
+
+if __name__ == "__main__":
+    main()

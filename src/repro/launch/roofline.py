@@ -1,0 +1,136 @@
+"""Roofline analysis from compiled dry-run artifacts.
+
+Three terms per (arch × shape × mesh), all in seconds:
+
+    compute    = HLO_FLOPs / (chips × 197e12)          # bf16 peak, v5e
+    memory     = HLO_bytes / (chips × 819e9)           # HBM bandwidth
+    collective = collective_bytes / (chips × 50e9 × 3) # ~3 usable ICI links
+
+cost_analysis() reports whole-program totals (all devices); collective
+bytes are NOT in cost_analysis — `collective_bytes()` parses the
+post-optimization HLO and sums operand sizes of every all-gather /
+all-reduce / reduce-scatter / all-to-all / collective-permute.
+
+MODEL_FLOPS (6·N·D dense, 6·N_active·D MoE) / HLO_FLOPs measures how much
+compiled compute is "useful" (catches remat recompute and dispatch waste).
+"""
+from __future__ import annotations
+
+import re
+
+# v5e hardware constants (per chip)
+PEAK_FLOPS = 197e12          # bf16
+HBM_BW = 819e9               # bytes/s
+ICI_BW_PER_LINK = 50e9       # bytes/s/link (~3 usable links per chip on a 2D torus)
+ICI_LINKS = 3.0
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"(bf16|f16|f32|f64|s8|u8|s16|u16|s32|u32|s64|u64|pred)"
+                       r"\[([\d,]*)\]")
+
+
+def _shape_bytes(txt: str) -> int:
+    total = 0
+    for m in _SHAPE_RE.finditer(txt):
+        dt, dims = m.group(1), m.group(2)
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(compiled) -> int:
+    """Sum of output-shape bytes of every collective op in the optimized HLO.
+    (Output shape ≈ operand volume for AG/AR/A2A; a consistent census for
+    comparing schedules, not an exact wire-byte count.)"""
+    try:
+        txt = compiled.as_text()
+    except Exception:
+        return 0
+    total = 0
+    for line in txt.splitlines():
+        s = line.strip()
+        # match "<shape> <name> = collective-op(...)" instruction lines
+        m = re.match(r"(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(\(?[^=]*?)\s*"
+                     r"(all-gather|all-reduce|reduce-scatter|all-to-all|"
+                     r"collective-permute)", s)
+        if m:
+            total += _shape_bytes(m.group(1))
+    return total
+
+
+def model_flops(cfg, cell) -> float:
+    """6·N·D (dense) or 6·N_active·D (MoE); D = tokens processed."""
+    n = param_count(cfg, active_only=True)
+    if cell.kind == "train":
+        tokens = cell.global_batch * cell.seq_len
+        return 6.0 * n * tokens
+    if cell.kind == "prefill":
+        tokens = cell.global_batch * cell.seq_len
+        return 2.0 * n * tokens          # forward only
+    tokens = cell.global_batch           # one token per sequence
+    return 2.0 * n * tokens
+
+
+def param_count(cfg, active_only=False) -> float:
+    """Analytic parameter count from the config."""
+    d, ff, v = cfg.d_model, cfg.d_ff, cfg.vocab_padded
+    hd = cfg.hd
+    attn = d * hd * (cfg.n_heads + 2 * cfg.n_kv_heads) + cfg.n_heads * hd * d
+    if cfg.family in ("dense",):
+        per_layer = attn + 3 * d * ff
+        layers = cfg.n_layers * per_layer
+    elif cfg.family == "moe":
+        e_used = cfg.moe_top_k if active_only else cfg.n_experts
+        shared = 3 * d * ff * cfg.n_shared_experts
+        per_layer = attn + 3 * d * ff * e_used + shared + d * cfg.n_experts
+        layers = cfg.n_layers * per_layer
+    elif cfg.family == "hybrid":
+        n, p = cfg.ssm_state, cfg.ssm_head_dim
+        mamba = d * (2 * d + 2 * n + d // p) + d * d
+        layers = cfg.n_layers * mamba + (attn + 3 * d * ff)   # + shared attn block
+    elif cfg.family == "ssm":
+        mlstm = 3 * d * cfg.n_heads * hd + 2 * d * cfg.n_heads + \
+            d * cfg.n_heads * hd + cfg.n_heads * hd * d
+        layers = cfg.n_layers * mlstm
+    elif cfg.family == "encdec":
+        enc = cfg.n_enc_layers * (attn + 3 * d * ff)
+        dec = cfg.n_dec_layers * (2 * attn + 3 * d * ff)
+        layers = enc + dec
+    else:
+        layers = 0
+    embed = v * d * (1 if cfg.tie_embeddings else 2)
+    return float(layers + embed)
+
+
+def terms(rec: dict) -> dict:
+    """rec carries PER-DEVICE census numbers (the SPMD module is the
+    per-device program), so no further division by chip count."""
+    compute = rec["flops"] / PEAK_FLOPS
+    memory = rec.get("dot_bytes", 0.0) / HBM_BW
+    coll = rec["collective_bytes"] / (ICI_BW_PER_LINK * ICI_LINKS)
+    dom = max((compute, "compute"), (memory, "memory"), (coll, "collective"))
+    out = {
+        "compute_s": compute, "memory_s": memory, "collective_s": coll,
+        "bottleneck": dom[1],
+        "step_lower_bound_s": max(compute, memory, coll),
+    }
+    return out
+
+
+def summarize(rec: dict, cfg=None, cell=None) -> dict:
+    t = terms(rec)
+    if cfg is not None and cell is not None:
+        mf = model_flops(cfg, cell)
+        t["model_flops"] = mf
+        t["useful_fraction"] = mf / rec["flops"] if rec["flops"] else 0.0
+    return t

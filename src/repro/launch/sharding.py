@@ -1,0 +1,146 @@
+"""Sharding rules: parameter / optimizer / batch / cache PartitionSpecs.
+
+Strategy (16×16 single pod; +pure-DP 'pod' axis multi-pod):
+  * FSDP: every matrix shards its d_model-sided dim over 'data' (ZeRO —
+    optimizer state inherits it since m/v mirror the params);
+  * TP: head/ff/expert/vocab dims shard over 'model';
+  * layer-stacked params ([L, ...]) keep L unsharded (scan axis);
+  * KV caches shard batch over 'data' and SEQUENCE over 'model' (kv-head
+    counts like 2 or 8 don't divide 16; sequence always does — GSPMD turns
+    the softmax into a partial-reduce, i.e. ring attention for free);
+  * batches shard over ('pod','data').
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+# param dims that shard over ('data' side, 'model' side)
+_IN_OUT = {"wq", "wk", "wv", "wz", "wi", "wf", "wo_gate", "in_proj",
+           "w_gate", "w_up"}            # [d, X] → P(data, model)
+_OUT_IN = {"wo", "out", "out_proj", "w_down"}   # [X, d] → P(model, data)
+_STACKED = {"layers", "mlstm", "slstm", "enc_layers", "dec_layers"}
+
+
+def _axis_size(axes, axis_sizes):
+    if axes is None:
+        return 1
+    if isinstance(axes, str):
+        return axis_sizes.get(axes, 1)
+    n = 1
+    for a in axes:
+        n *= axis_sizes.get(a, 1)
+    return n
+
+
+def _guard(spec_entries, shape, axis_sizes):
+    """Keep an axis only when its size divides the dim (e.g. 4 gate heads on
+    a 16-way model axis → replicate instead of failing to tile)."""
+    return [ax if _axis_size(ax, axis_sizes) <= 1
+            or dim % _axis_size(ax, axis_sizes) == 0 else None
+            for dim, ax in zip(shape, spec_entries)]
+
+
+def _param_rule(path_keys, shape, axis_sizes):
+    name = path_keys[-1]
+    rank = len(shape)
+    stacked = path_keys[0] in _STACKED
+    base = rank - 1 if stacked else rank
+
+    def wrap(*spec):
+        spec = tuple(spec) + (None,) * (base - len(spec))
+        spec = (((None,) if stacked else ()) + spec)
+        return P(*_guard(spec, shape, axis_sizes))
+
+    if name == "embed":
+        return wrap("model", "data")
+    if name == "unembed":
+        return wrap("data", "model")
+    if name == "router":
+        return wrap("data", None)
+    if name == "conv_w":
+        return wrap(None, "model")
+    if base == 3 and name in ("w_gate", "w_up"):    # MoE experts [E, d, ff]
+        return wrap("model", "data", None)
+    if base == 3 and name == "w_down":              # [E, ff, d]
+        return wrap("model", None, "data")
+    if base == 2 and name in _IN_OUT:
+        return wrap("data", "model")
+    if base == 2 and name in _OUT_IN:
+        return wrap("model", "data")
+    return wrap()          # biases, norms, gates: replicated
+
+
+DEFAULT_AXES = {"pod": 2, "data": 16, "model": 16}
+
+
+def param_specs(params_or_shapes, axis_sizes=None):
+    """PartitionSpec pytree matching a params tree (works on arrays or
+    ShapeDtypeStructs)."""
+    axis_sizes = axis_sizes or DEFAULT_AXES
+
+    def leaf_spec(path, leaf):
+        keys = [str(getattr(p, "key", getattr(p, "idx", p))) for p in path]
+        return _param_rule(keys, leaf.shape, axis_sizes)
+    return jax.tree_util.tree_map_with_path(leaf_spec, params_or_shapes)
+
+
+def opt_specs(opt_shapes, pspecs):
+    """Optimizer m/v mirror params; step is replicated."""
+    return {"m": pspecs, "v": pspecs, "step": P()}
+
+
+def state_specs(state_shapes, axis_sizes=None):
+    pspecs = param_specs(state_shapes.params, axis_sizes)
+    return type(state_shapes)(params=pspecs, opt=opt_specs(state_shapes.opt, pspecs))
+
+
+def batch_specs(batch_shapes, baxes):
+    """Token batches shard the leading (batch) dim over pod+data."""
+    b = baxes if baxes else None
+    return jax.tree_util.tree_map(
+        lambda x: P(b) if x.ndim == 1 else P(b, *([None] * (x.ndim - 1))),
+        batch_shapes)
+
+
+def cache_specs(cache_shapes, baxes, axis_sizes=None):
+    """KV caches [L, B, S, H, D] → P(None, batch, 'model', None, None);
+    SSM states [L, B, H, N, Pd] → P(None, batch, 'model', None, None);
+    scalars replicated. Non-dividing axes degrade to replication."""
+    axis_sizes = axis_sizes or DEFAULT_AXES
+    b = baxes if baxes else None
+
+    def leaf(path, x):
+        keys = [str(getattr(p, "key", getattr(p, "idx", p))) for p in path]
+        name = keys[-1]
+        if name in ("k", "v") and x.ndim == 5:        # stacked kv cache
+            spec = (None, b, "model", None, None)
+        elif name in ("k", "v") and x.ndim == 4:
+            spec = (b, "model", None, None)
+        elif name == "enc_out":
+            spec = (b, "model", None)
+        elif name == "h" and x.ndim == 5:             # stacked ssm state
+            spec = (None, b, "model", None, None)
+        elif name == "conv" and x.ndim == 4:
+            spec = (None, b, None, "model")
+        elif name in ("m", "n") and x.ndim >= 3:
+            spec = (None, b) + (None,) * (x.ndim - 2)
+        else:
+            spec = (None,) * x.ndim
+        return P(*_guard(spec, x.shape, axis_sizes))
+    return jax.tree_util.tree_map_with_path(leaf, cache_shapes)
+
+
+def named(mesh, specs):
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s), specs,
+        is_leaf=lambda x: isinstance(x, P))
+
+
+def with_shardings(mesh, shapes, specs):
+    """Attach NamedShardings to a ShapeDtypeStruct tree (dry-run inputs)."""
+    return jax.tree_util.tree_map(
+        lambda sds, sp: jax.ShapeDtypeStruct(
+            sds.shape, sds.dtype, sharding=NamedSharding(mesh, sp)),
+        shapes, specs,
+        is_leaf=lambda x: isinstance(x, (jax.ShapeDtypeStruct, P)))

@@ -1,0 +1,5 @@
+from . import attention, encdec, layers, moe, ssm, transformer, zoo
+from .zoo import Model, build
+
+__all__ = ["attention", "encdec", "layers", "moe", "ssm", "transformer",
+           "zoo", "Model", "build"]

@@ -1,0 +1,184 @@
+"""GQA attention block: train (chunked-online-softmax or Pallas kernel) and
+decode (KV cache) paths.
+
+Implementation selection:
+  * 'ref'     — materialized scores; small shapes (smoke tests)
+  * 'chunked' — scan over query blocks with online softmax: the pure-XLA
+                mirror of the flash kernel. Used by the dry-run so HLO
+                bytes reflect flash-style O(S·D) memory, not O(S²).
+  * 'kernel'  — kernels/flash_attention (TPU execution path)
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+import os
+
+from ..kernels.flash_attention.ops import gqa_attention
+from ..kernels.flash_attention.ref import attention_ref
+from .layers import apply_rope, dense_init, maybe_constrain, rmsnorm, rmsnorm_init
+
+NEG_INF = -1e30
+
+
+def attn_init(key, cfg, dtype):
+    d, h, hkv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    ks = jax.random.split(key, 5)
+    p = {
+        "wq": dense_init(ks[0], (d, h * hd), dtype),
+        "wk": dense_init(ks[1], (d, hkv * hd), dtype),
+        "wv": dense_init(ks[2], (d, hkv * hd), dtype),
+        "wo": dense_init(ks[3], (h * hd, d), dtype),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((h * hd,), dtype)
+        p["bk"] = jnp.zeros((hkv * hd,), dtype)
+        p["bv"] = jnp.zeros((hkv * hd,), dtype)
+    if cfg.qk_norm:
+        p["q_norm"] = rmsnorm_init(hd, dtype)
+        p["k_norm"] = rmsnorm_init(hd, dtype)
+    return p
+
+
+def _project_qkv(p, cfg, x, positions):
+    b, s, _ = x.shape
+    h, hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    q = x @ p["wq"]
+    k = x @ p["wk"]
+    v = x @ p["wv"]
+    if cfg.qkv_bias:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    q = q.reshape(b, s, h, hd)
+    k = k.reshape(b, s, hkv, hd)
+    v = v.reshape(b, s, hkv, hd)
+    if cfg.qk_norm:
+        q = rmsnorm(p["q_norm"], q, cfg.norm_eps)
+        k = rmsnorm(p["k_norm"], k, cfg.norm_eps)
+    if positions is not None:   # rope (decoder); None for encoder w/o rope
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def chunked_attention(q, k, v, *, causal: bool, q_chunk: int = 512,
+                      k_chunk: int = 1024):
+    """[B,H,S,D] online-softmax attention, O(chunk·S) live memory.
+    Mirrors the Pallas kernel so the dry-run HLO carries flash-like bytes."""
+    b, h, sq, d = q.shape
+    skv = k.shape[2]
+    q_chunk = min(q_chunk, sq)
+    k_chunk = min(k_chunk, skv)
+    scale = 1.0 / (d ** 0.5)
+    nq = sq // q_chunk
+    nk = skv // k_chunk
+    offset = skv - sq
+    qr = q.reshape(b, h, nq, q_chunk, d)
+
+    def q_block(qi, qb):
+        # qb: [B,H,Cq,D]
+        def kv_step(carry, ki):
+            m, l, acc = carry
+            ks = jax.lax.dynamic_slice_in_dim(k, ki * k_chunk, k_chunk, axis=2)
+            vs = jax.lax.dynamic_slice_in_dim(v, ki * k_chunk, k_chunk, axis=2)
+            s = jnp.einsum("bhqd,bhkd->bhqk", qb, ks,
+                           preferred_element_type=jnp.float32) * scale
+            if causal:
+                rows = qi * q_chunk + offset + jnp.arange(q_chunk)[:, None]
+                cols = ki * k_chunk + jnp.arange(k_chunk)[None, :]
+                s = jnp.where(rows >= cols, s, NEG_INF)
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1, keepdims=True))
+            p = jnp.exp(s - m_new)
+            alpha = jnp.exp(m - m_new)
+            l = l * alpha + jnp.sum(p, axis=-1, keepdims=True)
+            acc = acc * alpha + jnp.einsum(
+                "bhqk,bhkd->bhqd", p.astype(vs.dtype), vs,
+                preferred_element_type=jnp.float32)
+            return (m_new, l, acc), None
+
+        m0 = jnp.full((b, h, q_chunk, 1), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((b, h, q_chunk, 1), jnp.float32)
+        a0 = jnp.zeros((b, h, q_chunk, d), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(lambda c, i: kv_step(c, i),
+                                      (m0, l0, a0), jnp.arange(nk))
+        return (acc / jnp.maximum(l, 1e-30)).astype(q.dtype)
+
+    out = jax.lax.map(lambda i: q_block(i, qr[:, :, i]), jnp.arange(nq))
+    # [nq, B, H, Cq, D] → [B, H, S, D]
+    return jnp.moveaxis(out, 0, 2).reshape(b, h, sq, d)
+
+
+def _repeat_kv(k, groups):
+    return jnp.repeat(k, groups, axis=1)
+
+
+def attention_block(p, cfg, x, positions, *, causal=True, impl="ref",
+                    kv=None):
+    """Self-attention. kv: optional (k_ext, v_ext) to attend over instead
+    (cross-attention); x provides queries only in that case."""
+    b, s, _ = x.shape
+    q, k, v = _project_qkv(p, cfg, x, positions)
+    if kv is not None:
+        k, v = kv
+    q = q.transpose(0, 2, 1, 3)                 # [B,H,S,D]
+    k = k.transpose(0, 2, 1, 3)
+    v = v.transpose(0, 2, 1, 3)
+    if os.environ.get("REPRO_ATTN_SHARD") == "seq":
+        # §Perf H2: context parallelism — shard SEQ over 'model' during
+        # attention (heads often don't divide the model axis; seq always
+        # does). One planned gather per layer replaces per-chunk reshards.
+        q = maybe_constrain(q, ("pod", "data"), None, "model", None)
+        k = maybe_constrain(k, ("pod", "data"), None, "model", None)
+        v = maybe_constrain(v, ("pod", "data"), None, "model", None)
+    groups = cfg.n_heads // cfg.n_kv_heads
+    if impl == "kernel":
+        o = gqa_attention(q, k, v, causal=causal)   # handles GQA repeat
+        o = o.transpose(0, 2, 1, 3)
+    else:
+        k = _repeat_kv(k, groups)
+        v = _repeat_kv(v, groups)
+        if impl == "chunked":
+            o = chunked_attention(q, k, v, causal=causal)
+        else:
+            bh = b * cfg.n_heads
+            o = attention_ref(q.reshape(bh, s, cfg.hd),
+                              k.reshape(bh, -1, cfg.hd),
+                              v.reshape(bh, -1, cfg.hd), causal=causal)
+            o = o.reshape(b, cfg.n_heads, s, cfg.hd)
+        o = o.transpose(0, 2, 1, 3)
+    o = o.reshape(b, s, cfg.n_heads * cfg.hd)
+    return o @ p["wo"]
+
+
+def attention_decode(p, cfg, x, cache, pos):
+    """One-token decode with a static KV cache.
+
+    x: [B, 1, d]; cache: dict(k, v: [B, S_cache, Hkv, D], length: [] int);
+    pos: [] int32 current position. Returns (out [B,1,d], new cache)."""
+    b = x.shape[0]
+    q, k_new, v_new = _project_qkv(p, cfg, x, pos[None, None].astype(jnp.int32)
+                                   * jnp.ones((b, 1), jnp.int32))
+    k_cache = cache["k"].at[:, cache["length"]].set(k_new[:, 0])
+    v_cache = cache["v"].at[:, cache["length"]].set(v_new[:, 0])
+    groups = cfg.n_heads // cfg.n_kv_heads
+    qh = q.transpose(0, 2, 1, 3)                              # [B,H,1,D]
+    kh = _repeat_kv(k_cache.transpose(0, 2, 1, 3), groups)    # [B,H,S,D]
+    vh = _repeat_kv(v_cache.transpose(0, 2, 1, 3), groups)
+    scale = 1.0 / (cfg.hd ** 0.5)
+    s = jnp.einsum("bhqd,bhkd->bhqk", qh, kh,
+                   preferred_element_type=jnp.float32) * scale
+    valid = jnp.arange(kh.shape[2])[None, None, None, :] <= cache["length"]
+    s = jnp.where(valid, s, NEG_INF)
+    w = jax.nn.softmax(s, axis=-1).astype(vh.dtype)
+    o = jnp.einsum("bhqk,bhkd->bhqd", w, vh)
+    o = o.transpose(0, 2, 1, 3).reshape(b, 1, cfg.n_heads * cfg.hd)
+    new_cache = {"k": k_cache, "v": v_cache, "length": cache["length"] + 1}
+    return o @ p["wo"], new_cache
+
+
+def init_kv_cache(cfg, batch, max_len, dtype):
+    return {"k": jnp.zeros((batch, max_len, cfg.n_kv_heads, cfg.hd), dtype),
+            "v": jnp.zeros((batch, max_len, cfg.n_kv_heads, cfg.hd), dtype),
+            "length": jnp.zeros((), jnp.int32)}

@@ -1,0 +1,149 @@
+"""Encoder-decoder backbone (seamless-m4t-large-v2).
+
+The audio frontend is a STUB per the assignment: the encoder consumes
+precomputed frame embeddings [B, S, d]. The decoder is a standard causal
+stack with cross-attention into the encoder output; decode keeps both a
+self-attention KV cache and the (static) projected cross KV.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .attention import (attention_block, attention_decode, attn_init,
+                        init_kv_cache)
+from .layers import (dense_init, embed_init, mlp, mlp_init, rmsnorm,
+                     rmsnorm_init, stack_layers)
+
+
+def _dt(cfg):
+    return jnp.dtype(cfg.dtype)
+
+
+def _enc_layer_init(key, cfg, dtype):
+    k1, k2 = jax.random.split(key)
+    return {"ln1": rmsnorm_init(cfg.d_model, dtype),
+            "attn": attn_init(k1, cfg, dtype),
+            "ln2": rmsnorm_init(cfg.d_model, dtype),
+            "mlp": mlp_init(k2, cfg.d_model, cfg.d_ff, dtype)}
+
+
+def _dec_layer_init(key, cfg, dtype):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {"ln1": rmsnorm_init(cfg.d_model, dtype),
+            "self_attn": attn_init(k1, cfg, dtype),
+            "ln_x": rmsnorm_init(cfg.d_model, dtype),
+            "cross_attn": attn_init(k2, cfg, dtype),
+            "ln2": rmsnorm_init(cfg.d_model, dtype),
+            "mlp": mlp_init(k3, cfg.d_model, cfg.d_ff, dtype)}
+
+
+def init(key, cfg):
+    dtype = _dt(cfg)
+    ks = jax.random.split(key, 4)
+    return {
+        "embed": embed_init(ks[0], cfg.vocab_padded, cfg.d_model, dtype),
+        "enc_layers": stack_layers(ks[1], cfg.n_enc_layers,
+                                   lambda k: _enc_layer_init(k, cfg, dtype)),
+        "dec_layers": stack_layers(ks[2], cfg.n_dec_layers,
+                                   lambda k: _dec_layer_init(k, cfg, dtype)),
+        "ln_enc": rmsnorm_init(cfg.d_model, dtype),
+        "ln_f": rmsnorm_init(cfg.d_model, dtype),
+    }
+
+
+def encode(params, cfg, embeds, *, impl="ref", remat=True):
+    """embeds: [B, S, d] precomputed frame embeddings (frontend stub)."""
+    x = embeds.astype(_dt(cfg))
+    b, s = x.shape[:2]
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+
+    def body(x, lp):
+        h = attention_block(lp["attn"], cfg, rmsnorm(lp["ln1"], x, cfg.norm_eps),
+                            positions, causal=False, impl=impl)
+        x = x + h
+        x = x + mlp(lp["mlp"], rmsnorm(lp["ln2"], x, cfg.norm_eps))
+        return x, None
+
+    body_fn = jax.checkpoint(body) if remat else body
+    x, _ = jax.lax.scan(body_fn, x, params["enc_layers"])
+    return rmsnorm(params["ln_enc"], x, cfg.norm_eps)
+
+
+def _cross_kv(p, cfg, enc_out):
+    b, s, _ = enc_out.shape
+    k = (enc_out @ p["wk"]).reshape(b, s, cfg.n_kv_heads, cfg.hd)
+    v = (enc_out @ p["wv"]).reshape(b, s, cfg.n_kv_heads, cfg.hd)
+    if cfg.qkv_bias:
+        k, v = k + p["bk"], v + p["bv"]
+    return k, v
+
+
+def decode_train(params, cfg, tokens, enc_out, *, impl="ref", remat=True,
+                 last_only=False):
+    """Teacher-forced decoder pass. Returns logits [B, S, V]."""
+    x = params["embed"][tokens]
+    b, s = x.shape[:2]
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+
+    def body(x, lp):
+        h = attention_block(lp["self_attn"], cfg,
+                            rmsnorm(lp["ln1"], x, cfg.norm_eps),
+                            positions, causal=True, impl=impl)
+        x = x + h
+        kv = _cross_kv(lp["cross_attn"], cfg, enc_out)
+        h = attention_block(lp["cross_attn"], cfg,
+                            rmsnorm(lp["ln_x"], x, cfg.norm_eps),
+                            None, causal=False, impl=impl, kv=kv)
+        x = x + h
+        x = x + mlp(lp["mlp"], rmsnorm(lp["ln2"], x, cfg.norm_eps))
+        return x, None
+
+    body_fn = jax.checkpoint(body) if remat else body
+    x, _ = jax.lax.scan(body_fn, x, params["dec_layers"])
+    x = rmsnorm(params["ln_f"], x, cfg.norm_eps)
+    if last_only:
+        x = x[:, -1:]
+    return (x @ params["embed"].T).astype(jnp.float32)
+
+
+def forward(params, cfg, embeds, tokens, *, impl="ref", remat=True,
+            last_only=False):
+    """Full enc-dec training step: frame embeddings → target logits."""
+    enc_out = encode(params, cfg, embeds, impl=impl, remat=remat)
+    logits = decode_train(params, cfg, tokens, enc_out, impl=impl, remat=remat,
+                          last_only=last_only)
+    return logits, jnp.float32(0)
+
+
+def init_cache(cfg, batch, max_len, enc_len):
+    dtype = _dt(cfg)
+    return {
+        "kv": jax.vmap(lambda _: init_kv_cache(cfg, batch, max_len, dtype))(
+            jnp.arange(cfg.n_dec_layers)),
+        "enc_out": jnp.zeros((batch, enc_len, cfg.d_model), dtype),
+    }
+
+
+def decode_step(params, cfg, tokens, cache, pos, *, impl="ref"):
+    """One decoder token against cached enc_out + self KV."""
+    x = params["embed"][tokens]
+    enc_out = cache["enc_out"]
+
+    def body(x, inp):
+        lp, lc = inp
+        h = rmsnorm(lp["ln1"], x, cfg.norm_eps)
+        h, lc_new = attention_decode(lp["self_attn"], cfg, h, lc, pos)
+        x = x + h
+        kv = _cross_kv(lp["cross_attn"], cfg, enc_out)
+        h = attention_block(lp["cross_attn"], cfg,
+                            rmsnorm(lp["ln_x"], x, cfg.norm_eps),
+                            None, causal=False, impl=impl, kv=kv)
+        x = x + h
+        x = x + mlp(lp["mlp"], rmsnorm(lp["ln2"], x, cfg.norm_eps))
+        return x, lc_new
+
+    x, kv = jax.lax.scan(body, x, (params["dec_layers"], cache["kv"]))
+    x = rmsnorm(params["ln_f"], x, cfg.norm_eps)
+    logits = (x[:, 0] @ params["embed"].T).astype(jnp.float32)
+    return logits, {"kv": kv, "enc_out": enc_out}

@@ -1,0 +1,117 @@
+"""Shared layers: norms, RoPE, SwiGLU MLP, embeddings.
+
+Pure functions over parameter pytrees (nested dicts of jnp arrays). Layer
+stacks are scan-compatible: per-layer params carry a leading [L] dim.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _dtype(cfg):
+    return jnp.dtype(cfg.dtype)
+
+
+_CONSTRAINT_MESH = [None]
+
+
+def set_constraint_mesh(mesh):
+    """Install the mesh activation constraints target (launch layer calls
+    this before lowering; None disables — single-device tests)."""
+    _CONSTRAINT_MESH[0] = mesh
+
+
+def maybe_constrain(x, *spec):
+    """with_sharding_constraint against the installed mesh; no-op in
+    single-device tests. Spec entries naming axes absent from the mesh
+    (e.g. 'pod' on a single-pod mesh) degrade to replication. §Perf lever:
+    pins activation layouts so GSPMD does one planned collective instead of
+    per-op reshards."""
+    import os
+    mesh = _CONSTRAINT_MESH[0]
+    if mesh is None or os.environ.get("REPRO_NO_CONSTRAIN"):
+        return x
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    names = set(mesh.axis_names)
+
+    def keep(entry):
+        if entry is None:
+            return None
+        if isinstance(entry, str):
+            return entry if entry in names else None
+        kept = tuple(a for a in entry if a in names)
+        return kept if kept else None
+
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, P(*(keep(e) for e in spec))))
+
+
+# --- init helpers -------------------------------------------------------------
+
+def dense_init(key, shape, dtype, scale=None):
+    fan_in = shape[0] if len(shape) >= 2 else 1
+    scale = scale if scale is not None else 1.0 / np.sqrt(fan_in)
+    return (jax.random.normal(key, shape, jnp.float32) * scale).astype(dtype)
+
+
+def embed_init(key, vocab, d, dtype):
+    return (jax.random.normal(key, (vocab, d), jnp.float32) * 0.02).astype(dtype)
+
+
+# --- RMSNorm -------------------------------------------------------------------
+
+def rmsnorm_init(d, dtype):
+    return {"scale": jnp.ones((d,), dtype)}
+
+
+def rmsnorm(p, x, eps=1e-5):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps)
+    return (out * p["scale"].astype(jnp.float32)).astype(x.dtype)
+
+
+# --- RoPE ---------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float):
+    return 1.0 / (theta ** (np.arange(0, head_dim, 2) / head_dim))
+
+
+def apply_rope(x, positions, theta: float):
+    """x: [..., S, H, D]; positions: [..., S]."""
+    d = x.shape[-1]
+    freqs = jnp.asarray(rope_freqs(d, theta), jnp.float32)          # [D/2]
+    ang = positions[..., :, None].astype(jnp.float32) * freqs       # [..., S, D/2]
+    cos = jnp.cos(ang)[..., None, :]                                # [..., S, 1, D/2]
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# --- SwiGLU MLP ------------------------------------------------------------------
+
+def mlp_init(key, d, ff, dtype):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {"w_gate": dense_init(k1, (d, ff), dtype),
+            "w_up": dense_init(k2, (d, ff), dtype),
+            "w_down": dense_init(k3, (ff, d), dtype)}
+
+
+def mlp(p, x):
+    h = jax.nn.silu(x @ p["w_gate"]) * (x @ p["w_up"])
+    return h @ p["w_down"]
+
+
+# --- stacking utilities -------------------------------------------------------
+
+def stack_layers(key, n_layers, init_fn):
+    """Stacked per-layer params with leading [L] dim (scan-ready)."""
+    keys = jax.random.split(key, n_layers)
+    return jax.vmap(init_fn)(keys)
+
+
+def layer_slice(params, i):
+    return jax.tree.map(lambda x: x[i], params)

@@ -1,0 +1,83 @@
+"""Mixture-of-Experts FFN: token-choice top-k routing with capacity,
+optional always-on shared experts (deepseek-moe), GShard-style einsum
+dispatch so expert parallelism is a pure sharding annotation (experts on
+the 'model' mesh axis → XLA emits the dispatch all_to_all).
+
+Capacity math: C = ceil(cf · T · k / E) per expert; overflow tokens drop
+(standard). The train_step microbatches tokens so T·E·C dispatch tensors
+stay VMEM-sane (see train/train_step.py).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .layers import dense_init, mlp, mlp_init
+
+
+def moe_init(key, cfg, dtype):
+    d, ff, e = cfg.d_model, cfg.d_ff, cfg.n_experts
+    ks = jax.random.split(key, 5)
+    p = {
+        "router": dense_init(ks[0], (d, e), jnp.float32, scale=0.02),
+        "w_gate": dense_init(ks[1], (e, d, ff), dtype),
+        "w_up": dense_init(ks[2], (e, d, ff), dtype),
+        "w_down": dense_init(ks[3], (e, ff, d), dtype),
+    }
+    if cfg.n_shared_experts:
+        p["shared"] = mlp_init(ks[4], d, ff * cfg.n_shared_experts, dtype)
+    return p
+
+
+def moe_ffn(p, cfg, x):
+    """x: [B, S, d] → [B, S, d] + aux loss (load-balance)."""
+    b, s, d = x.shape
+    t = b * s
+    e, k = cfg.n_experts, cfg.moe_top_k
+    # floor of k keeps tiny-T (decode) calls near-lossless
+    cap = max(int(cfg.moe_capacity_factor * t * k / e), k)
+    xt = x.reshape(t, d)
+
+    logits = (xt.astype(jnp.float32) @ p["router"])           # [T, E]
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, gate_idx = jax.lax.top_k(probs, k)             # [T, k]
+    gate_vals = gate_vals / jnp.maximum(
+        jnp.sum(gate_vals, axis=-1, keepdims=True), 1e-9)
+
+    # position of each (token, choice) within its expert's capacity
+    onehot = jax.nn.one_hot(gate_idx, e, dtype=jnp.int32)     # [T, k, E]
+    pos_in_expert = (jnp.cumsum(onehot.reshape(t * k, e), axis=0)
+                     .reshape(t, k, e) - 1)
+    pos = jnp.sum(pos_in_expert * onehot, axis=-1)            # [T, k]
+    keep = pos < cap
+
+    # gather/scatter dispatch (§Perf M1): the classic one-hot einsum costs
+    # 2·T·E·C·d flops — ~3× the expert FFN itself at E=128. Building an
+    # explicit [E, C] token index and gathering is pure data movement.
+    flat_t = jnp.repeat(jnp.arange(t, dtype=jnp.int32), k)    # [T*k]
+    flat_e = gate_idx.reshape(-1)                              # [T*k]
+    flat_pos = jnp.where(keep, pos, cap).reshape(-1)           # cap = dropped
+    disp = jnp.full((e, cap + 1), t, jnp.int32)                # t = pad row
+    disp = disp.at[flat_e, flat_pos].set(
+        jnp.where(flat_pos < cap, flat_t, t))[:, :cap]         # [E, C]
+    x_pad = jnp.concatenate([xt, jnp.zeros((1, d), xt.dtype)])
+    xe = x_pad[disp]                                           # [E, C, d]
+    h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", xe, p["w_gate"])) \
+        * jnp.einsum("ecd,edf->ecf", xe, p["w_up"])
+    ye = jnp.einsum("ecf,efd->ecd", h, p["w_down"])            # [E, C, d]
+    # combine: gather each kept assignment's expert output, weight, scatter-add
+    slot_ok = (flat_pos < cap)
+    ye_flat = ye[flat_e, jnp.minimum(flat_pos, cap - 1)]       # [T*k, d]
+    wgt = (gate_vals.reshape(-1) * slot_ok).astype(ye_flat.dtype)
+    out = jax.ops.segment_sum(ye_flat * wgt[:, None], flat_t,
+                              num_segments=t).reshape(b, s, d).astype(x.dtype)
+
+    if cfg.n_shared_experts:
+        out = out + mlp(p["shared"], x)
+
+    # load-balance aux loss (Switch): E * Σ_e f_e · p_e
+    f = jnp.mean(jnp.sum(jax.nn.one_hot(gate_idx, e, dtype=jnp.float32),
+                         axis=1), axis=0)                     # fraction per expert
+    pbar = jnp.mean(probs, axis=0)
+    aux = e * jnp.sum(f * pbar) * cfg.moe_aux_loss
+    return out, aux

@@ -1,0 +1,318 @@
+"""SSM / linear-attention layers: Mamba2 (SSD chunked scan), mLSTM, sLSTM.
+
+Both Mamba2 and mLSTM are gated linear recurrences over an outer-product
+state — the same chunked "SSD" computation serves both:
+
+    h_t = a_t · h_{t-1} + k_t ⊗ v_t          (state  [N, P])
+    y_t = qᵗ_t · h_t                          (readout)
+
+`chunked_linear_attention` evaluates this with O(S·Q) intra-chunk matmuls
+(MXU work) + an O(S/Q) inter-chunk scan — the TPU-native dual form. A naive
+sequential scan lives alongside as the test oracle and decode path.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .layers import dense_init, rmsnorm, rmsnorm_init
+
+
+# --------------------------------------------------------------------------
+# Core: chunked gated linear attention (SSD dual form)
+# --------------------------------------------------------------------------
+
+def chunked_linear_attention(q, k, v, log_a, chunk: int):
+    """q,k: [B,S,H,N]; v: [B,S,H,P]; log_a: [B,S,H] (log decay ≤ 0).
+    Returns y: [B,S,H,P] where y_t = q_t · (Σ_{s≤t} (∏_{r=s+1..t} a_r) k_s v_sᵀ)."""
+    b, s, h, n = q.shape
+    p = v.shape[-1]
+    nc = s // chunk
+    qc = q.reshape(b, nc, chunk, h, n)
+    kc = k.reshape(b, nc, chunk, h, n)
+    vc = v.reshape(b, nc, chunk, h, p)
+    la = log_a.reshape(b, nc, chunk, h)
+    cum = jnp.cumsum(la, axis=2)                      # within-chunk cumulative
+    total = cum[:, :, -1]                             # [B,nc,H]
+
+    # --- intra-chunk (quadratic in chunk len; MXU matmuls) ---
+    # scores[t1,t2] = q_t1·k_t2 · exp(cum_t1 - cum_t2) for t2 ≤ t1
+    sc = jnp.einsum("bcthn,bcshn->bchts", qc, kc,
+                    preferred_element_type=jnp.float32)
+    decay = cum[..., :, None, :] - cum[..., None, :, :]          # [b,nc,t,s,h]
+    decay = jnp.moveaxis(decay, -1, 2)                           # [b,nc,h,t,s]
+    causal = jnp.tril(jnp.ones((chunk, chunk), bool))
+    w = jnp.where(causal, sc * jnp.exp(decay), 0.0)
+    y_intra = jnp.einsum("bchts,bcshp->bcthp", w.astype(v.dtype), vc)
+
+    # --- chunk summaries: state contribution of each chunk ---
+    # S_c = Σ_t exp(total - cum_t) k_t ⊗ v_t     [b,nc,h,n,p]
+    wk = jnp.exp(total[:, :, None, :] - cum) [..., None] * kc    # [b,nc,t,h,n]
+    s_chunk = jnp.einsum("bcthn,bcthp->bchnp", wk.astype(v.dtype), vc)
+
+    # --- inter-chunk scan: h_c = exp(total_c) h_{c-1} + S_c ---
+    def step(hprev, inp):
+        s_c, tot = inp
+        hnew = hprev * jnp.exp(tot)[..., None, None].astype(hprev.dtype) + s_c
+        return hnew, hprev                       # emit the state BEFORE chunk c
+
+    h0 = jnp.zeros((b, h, n, p), jnp.float32)
+    _, h_prevs = jax.lax.scan(
+        step, h0,
+        (jnp.moveaxis(s_chunk, 1, 0).astype(jnp.float32),
+         jnp.moveaxis(total, 1, 0)))
+    h_prevs = jnp.moveaxis(h_prevs, 0, 1)        # [b,nc,h,n,p]
+
+    # --- inter-chunk readout: y_t += exp(cum_t) q_t · h_{c-1} ---
+    qdec = (jnp.exp(cum)[..., None] * qc).astype(jnp.float32)
+    y_inter = jnp.einsum("bcthn,bchnp->bcthp", qdec, h_prevs.astype(jnp.float32))
+    y = y_intra.astype(jnp.float32) + y_inter
+    return y.reshape(b, s, h, p)
+
+
+def linear_attention_ref(q, k, v, log_a):
+    """Sequential oracle (and the decode recurrence)."""
+    b, s, h, n = q.shape
+    p = v.shape[-1]
+
+    def step(hprev, inp):
+        qt, kt, vt, lat = inp
+        hnew = hprev * jnp.exp(lat)[..., None, None] + \
+            jnp.einsum("bhn,bhp->bhnp", kt, vt)
+        yt = jnp.einsum("bhn,bhnp->bhp", qt, hnew)
+        return hnew, yt
+
+    h0 = jnp.zeros((b, h, n, p), jnp.float32)
+    xs = (jnp.moveaxis(q, 1, 0).astype(jnp.float32),
+          jnp.moveaxis(k, 1, 0).astype(jnp.float32),
+          jnp.moveaxis(v, 1, 0).astype(jnp.float32),
+          jnp.moveaxis(log_a, 1, 0).astype(jnp.float32))
+    _, ys = jax.lax.scan(step, h0, xs)
+    return jnp.moveaxis(ys, 0, 1)                # [B,S,H,P]
+
+
+# --------------------------------------------------------------------------
+# Mamba2 block
+# --------------------------------------------------------------------------
+
+def mamba2_init(key, cfg, dtype):
+    d = cfg.d_model
+    n = cfg.ssm_state
+    pdim = cfg.ssm_head_dim
+    heads = d // pdim
+    ks = jax.random.split(key, 6)
+    return {
+        "in_proj": dense_init(ks[0], (d, 2 * d + 2 * n + heads), dtype),
+        "conv_w": dense_init(ks[1], (cfg.conv_width, d + 2 * n), dtype, scale=0.5),
+        "a_log": jnp.zeros((heads,), jnp.float32),     # A = -exp(a_log)
+        "dt_bias": jnp.full((heads,), -2.0, jnp.float32),
+        "d_skip": jnp.ones((heads,), jnp.float32),
+        "out_proj": dense_init(ks[2], (d, d), dtype),
+        "norm": rmsnorm_init(d, dtype),
+    }
+
+
+def _causal_conv(x, w):
+    """x: [B,S,C]; w: [K,C] depthwise causal conv."""
+    k = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    out = sum(xp[:, i:i + x.shape[1]] * w[i] for i in range(k))
+    return out
+
+
+def mamba2_block(p, cfg, x, chunk=None):
+    """x: [B,S,d] → [B,S,d] (pre-norm residual inside)."""
+    b, s, d = x.shape
+    n = cfg.ssm_state
+    pdim = cfg.ssm_head_dim
+    heads = d // pdim
+    chunk = chunk or min(cfg.ssm_chunk, s)
+    h = x @ p["in_proj"]                             # [B,S,2d+2n+H]
+    z, xin, bc, dt = jnp.split(h, [d, 2 * d, 2 * d + 2 * n], axis=-1)
+    conv_in = jnp.concatenate([xin, bc], axis=-1)
+    conv_out = jax.nn.silu(_causal_conv(conv_in, p["conv_w"]))
+    xin, bmat, cmat = jnp.split(conv_out, [d, d + n], axis=-1)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])   # [B,S,H]
+    a = -jnp.exp(p["a_log"])                                      # [H]
+    log_a = a * dt                                                # [B,S,H]
+    xh = xin.reshape(b, s, heads, pdim)
+    k = jnp.broadcast_to(bmat[:, :, None, :], (b, s, heads, n))
+    q = jnp.broadcast_to(cmat[:, :, None, :], (b, s, heads, n))
+    v = xh * dt[..., None].astype(xh.dtype)
+    if s % chunk == 0 and s > 1:
+        y = chunked_linear_attention(q, k, v, log_a, chunk)
+    else:
+        y = linear_attention_ref(q, k, v, log_a)
+    y = y + p["d_skip"][None, None, :, None] * xh.astype(jnp.float32)
+    y = y.reshape(b, s, d).astype(x.dtype) * jax.nn.silu(z)
+    return rmsnorm(p["norm"], y, cfg.norm_eps) @ p["out_proj"]
+
+
+def mamba2_decode(p, cfg, x, state):
+    """One-token decode. state: dict(h: [B,H,N,P], conv: [B,K-1,C])."""
+    b, _, d = x.shape
+    n = cfg.ssm_state
+    pdim = cfg.ssm_head_dim
+    heads = d // pdim
+    hin = x @ p["in_proj"]
+    z, xin, bc, dt = jnp.split(hin, [d, 2 * d, 2 * d + 2 * n], axis=-1)
+    conv_in = jnp.concatenate([xin, bc], axis=-1)     # [B,1,C]
+    hist = jnp.concatenate([state["conv"], conv_in], axis=1)   # [B,K,C]
+    w = p["conv_w"]
+    conv_out = jax.nn.silu(jnp.einsum("bkc,kc->bc", hist, w))[:, None]
+    xin, bmat, cmat = jnp.split(conv_out, [d, d + n], axis=-1)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])[:, 0]   # [B,H]
+    a = -jnp.exp(p["a_log"])
+    decay = jnp.exp(a * dt)                                             # [B,H]
+    xh = xin.reshape(b, heads, pdim)
+    kt = jnp.broadcast_to(bmat[:, 0, None, :], (b, heads, n))
+    qt = jnp.broadcast_to(cmat[:, 0, None, :], (b, heads, n))
+    vt = xh * dt[..., None].astype(xh.dtype)
+    hnew = state["h"] * decay[..., None, None] + \
+        jnp.einsum("bhn,bhp->bhnp", kt.astype(jnp.float32), vt.astype(jnp.float32))
+    y = jnp.einsum("bhn,bhnp->bhp", qt.astype(jnp.float32), hnew)
+    y = y + p["d_skip"][None, :, None] * xh.astype(jnp.float32)
+    y = y.reshape(b, 1, d).astype(x.dtype) * jax.nn.silu(z)
+    out = rmsnorm(p["norm"], y, cfg.norm_eps) @ p["out_proj"]
+    return out, {"h": hnew, "conv": hist[:, 1:]}
+
+
+def mamba2_init_state(cfg, batch, dtype):
+    d = cfg.d_model
+    heads = d // cfg.ssm_head_dim
+    return {"h": jnp.zeros((batch, heads, cfg.ssm_state, cfg.ssm_head_dim),
+                           jnp.float32),
+            "conv": jnp.zeros((batch, cfg.conv_width - 1,
+                               d + 2 * cfg.ssm_state), dtype)}
+
+
+# --------------------------------------------------------------------------
+# xLSTM: mLSTM (matrix memory) and sLSTM (scalar memory) blocks
+# --------------------------------------------------------------------------
+
+def mlstm_init(key, cfg, dtype):
+    d = cfg.d_model
+    hd = cfg.hd
+    heads = cfg.n_heads
+    ks = jax.random.split(key, 6)
+    return {
+        "wq": dense_init(ks[0], (d, heads * hd), dtype),
+        "wk": dense_init(ks[1], (d, heads * hd), dtype),
+        "wv": dense_init(ks[2], (d, heads * hd), dtype),
+        "wf": dense_init(ks[3], (d, heads), jnp.float32, scale=0.02),
+        "wi": dense_init(ks[4], (d, heads), jnp.float32, scale=0.02),
+        "wo_gate": dense_init(ks[5], (d, heads * hd), dtype),
+        "out": dense_init(jax.random.fold_in(key, 7), (heads * hd, d), dtype),
+        "norm": rmsnorm_init(heads * hd, dtype),
+    }
+
+
+def mlstm_block(p, cfg, x, chunk=None):
+    """mLSTM ≈ gated linear attention with sigmoid forget / exp input gates."""
+    b, s, d = x.shape
+    heads, hd = cfg.n_heads, cfg.hd
+    chunk = chunk or min(cfg.ssm_chunk, s)
+    q = (x @ p["wq"]).reshape(b, s, heads, hd) / (hd ** 0.5)
+    k = (x @ p["wk"]).reshape(b, s, heads, hd)
+    v = (x @ p["wv"]).reshape(b, s, heads, hd)
+    logf = jax.nn.log_sigmoid(x.astype(jnp.float32) @ p["wf"])   # [B,S,H] ≤ 0
+    i_gate = jnp.exp(jnp.minimum(x.astype(jnp.float32) @ p["wi"], 8.0))
+    k = k * i_gate[..., None].astype(k.dtype)
+    if s % chunk == 0 and s > 1:
+        y = chunked_linear_attention(q, k, v, logf, chunk)
+    else:
+        y = linear_attention_ref(q, k, v, logf)
+    o = jax.nn.sigmoid(x @ p["wo_gate"]).reshape(b, s, heads, hd)
+    y = (y.astype(x.dtype) * o).reshape(b, s, heads * hd)
+    return rmsnorm(p["norm"], y, cfg.norm_eps) @ p["out"]
+
+
+def slstm_init(key, cfg, dtype):
+    d = cfg.d_model
+    heads = cfg.n_heads
+    hd = d // heads
+    ks = jax.random.split(key, 5)
+    return {
+        "wz": dense_init(ks[0], (d, d), dtype),
+        "wi": dense_init(ks[1], (d, d), jnp.float32, scale=0.02),
+        "wf": dense_init(ks[2], (d, d), jnp.float32, scale=0.02),
+        "wo": dense_init(ks[3], (d, d), dtype),
+        "out": dense_init(ks[4], (d, d), dtype),
+        "norm": rmsnorm_init(d, dtype),
+    }
+
+
+def slstm_block(p, cfg, x):
+    """Scalar-memory LSTM with exponential gating — inherently sequential;
+    lowered as one lax.scan over the sequence."""
+    b, s, d = x.shape
+    z = jnp.tanh(x @ p["wz"]).astype(jnp.float32)
+    i_pre = x.astype(jnp.float32) @ p["wi"]
+    f_pre = x.astype(jnp.float32) @ p["wf"]
+    o = jax.nn.sigmoid(x @ p["wo"]).astype(jnp.float32)
+
+    def step(carry, inp):
+        c, n, m = carry
+        zt, it, ft, ot = inp
+        logf = jax.nn.log_sigmoid(ft)
+        m_new = jnp.maximum(logf + m, it)
+        i_sc = jnp.exp(it - m_new)
+        f_sc = jnp.exp(logf + m - m_new)
+        c = f_sc * c + i_sc * zt
+        n = f_sc * n + i_sc
+        h = ot * c / jnp.maximum(n, 1.0)
+        return (c, n, m_new), h
+
+    zero = jnp.zeros((b, d), jnp.float32)
+    (c, n, m), hs = jax.lax.scan(
+        step, (zero, zero, zero - 1e30),
+        (jnp.moveaxis(z, 1, 0), jnp.moveaxis(i_pre, 1, 0),
+         jnp.moveaxis(f_pre, 1, 0), jnp.moveaxis(o, 1, 0)))
+    y = jnp.moveaxis(hs, 0, 1).astype(x.dtype)
+    return rmsnorm(p["norm"], y, cfg.norm_eps) @ p["out"]
+
+
+def slstm_decode(p, cfg, x, state):
+    """One sLSTM step with carried (c, n, m) state. x: [B, 1, d]."""
+    b, _, d = x.shape
+    xt = x[:, 0]
+    z = jnp.tanh(xt @ p["wz"]).astype(jnp.float32)
+    it = (xt.astype(jnp.float32) @ p["wi"])
+    ft = (xt.astype(jnp.float32) @ p["wf"])
+    o = jax.nn.sigmoid(xt @ p["wo"]).astype(jnp.float32)
+    c, n, m = state["c"], state["n"], state["m"]
+    logf = jax.nn.log_sigmoid(ft)
+    m_new = jnp.maximum(logf + m, it)
+    i_sc = jnp.exp(it - m_new)
+    f_sc = jnp.exp(logf + m - m_new)
+    c = f_sc * c + i_sc * z
+    n = f_sc * n + i_sc
+    h = (o * c / jnp.maximum(n, 1.0)).astype(x.dtype)
+    y = rmsnorm(p["norm"], h[:, None], cfg.norm_eps) @ p["out"]
+    return y, {"c": c, "n": n, "m": m_new}
+
+
+def mlstm_decode(p, cfg, x, state):
+    """One-token mLSTM decode. state: dict(h [B,H,N,P], m [B,H], n [B,H,N])."""
+    b, _, d = x.shape
+    heads, hd = cfg.n_heads, cfg.hd
+    q = (x @ p["wq"]).reshape(b, heads, hd) / (hd ** 0.5)
+    k = (x @ p["wk"]).reshape(b, heads, hd)
+    v = (x @ p["wv"]).reshape(b, heads, hd)
+    logf = jax.nn.log_sigmoid(x.astype(jnp.float32) @ p["wf"])[:, 0]  # [B,H]
+    i_gate = jnp.exp(jnp.minimum(x.astype(jnp.float32) @ p["wi"], 8.0))[:, 0]
+    k = k * i_gate[..., None].astype(k.dtype)
+    hnew = state["h"] * jnp.exp(logf)[..., None, None] + \
+        jnp.einsum("bhn,bhp->bhnp", k.astype(jnp.float32), v.astype(jnp.float32))
+    y = jnp.einsum("bhn,bhnp->bhp", q.astype(jnp.float32), hnew)
+    o = jax.nn.sigmoid(x @ p["wo_gate"]).reshape(b, heads, hd)
+    y = (y.astype(x.dtype) * o).reshape(b, 1, heads * hd)
+    out = rmsnorm(p["norm"], y, cfg.norm_eps) @ p["out"]
+    return out, {"h": hnew, "m": state["m"], "n": state["n"]}
+
+
+def mlstm_init_state(cfg, batch):
+    heads, hd = cfg.n_heads, cfg.hd
+    return {"h": jnp.zeros((batch, heads, hd, hd), jnp.float32),
+            "m": jnp.zeros((batch, heads), jnp.float32),
+            "n": jnp.zeros((batch, heads, hd), jnp.float32)}

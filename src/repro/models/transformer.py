@@ -1,0 +1,268 @@
+"""Model assembly: decoder-only LM (dense / MoE / hybrid / xLSTM stacks).
+
+Every architecture exposes the same surface:
+    init(key, cfg)                       → params
+    forward(params, cfg, tokens|embeds)  → logits  (training path)
+    init_cache(cfg, batch, max_len)      → decode cache
+    decode_step(params, cfg, tok, cache) → logits, cache
+
+Layer stacks use jax.lax.scan over [L]-stacked params with
+jax.checkpoint (remat) on the body — compile-time and memory sane at 94
+layers × 512 devices. Hybrid stacks (zamba2) scan the Mamba backbone and
+apply the SHARED attention block (one weight set, distinct KV per call
+site) every `attn_every` layers via an inner switch.
+"""
+from __future__ import annotations
+
+import functools
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from .attention import (attention_block, attention_decode, attn_init,
+                        init_kv_cache)
+from .layers import (dense_init, embed_init, layer_slice, maybe_constrain,
+                     mlp, mlp_init, rmsnorm, rmsnorm_init, stack_layers)
+from .moe import moe_ffn, moe_init
+from .ssm import (mamba2_block, mamba2_decode, mamba2_init, mamba2_init_state,
+                  mlstm_block, mlstm_decode, mlstm_init, mlstm_init_state,
+                  slstm_block, slstm_decode, slstm_init)
+
+
+def _dt(cfg):
+    return jnp.dtype(cfg.dtype)
+
+
+# --------------------------------------------------------------------------
+# per-layer init / apply (dense + moe families)
+# --------------------------------------------------------------------------
+
+def _dense_layer_init(key, cfg, dtype):
+    k1, k2 = jax.random.split(key)
+    p = {"ln1": rmsnorm_init(cfg.d_model, dtype),
+         "attn": attn_init(k1, cfg, dtype),
+         "ln2": rmsnorm_init(cfg.d_model, dtype)}
+    if cfg.family == "moe":
+        p["moe"] = moe_init(k2, cfg, dtype)
+    else:
+        p["mlp"] = mlp_init(k2, cfg.d_model, cfg.d_ff, dtype)
+    return p
+
+
+def _dense_layer_apply(p, cfg, x, positions, impl):
+    scale = cfg.scale_depth / (cfg.n_layers ** 0.5) if cfg.scale_depth else 1.0
+    h = attention_block(p["attn"], cfg, rmsnorm(p["ln1"], x, cfg.norm_eps),
+                        positions, causal=True, impl=impl)
+    x = x + h * scale
+    hin = rmsnorm(p["ln2"], x, cfg.norm_eps)
+    if cfg.family == "moe":
+        h, aux = moe_ffn(p["moe"], cfg, hin)
+    else:
+        h, aux = mlp(p["mlp"], hin), 0.0
+    return x + h * scale, aux
+
+
+# --------------------------------------------------------------------------
+# init
+# --------------------------------------------------------------------------
+
+def init(key, cfg):
+    dtype = _dt(cfg)
+    keys = jax.random.split(key, 8)
+    params = {"embed": embed_init(keys[0], cfg.vocab_padded, cfg.d_model, dtype),
+              "ln_f": rmsnorm_init(cfg.d_model, dtype)}
+    if not cfg.tie_embeddings:
+        params["unembed"] = dense_init(keys[1], (cfg.d_model, cfg.vocab_padded), dtype)
+
+    if cfg.family in ("dense", "moe"):
+        params["layers"] = stack_layers(
+            keys[2], cfg.n_layers, lambda k: _dense_layer_init(k, cfg, dtype))
+    elif cfg.family == "hybrid":       # zamba2: mamba backbone + shared attn
+        params["layers"] = stack_layers(
+            keys[2], cfg.n_layers, lambda k: mamba2_init(k, cfg, dtype))
+        params["shared_attn"] = _dense_layer_init(keys[3], cfg, dtype)
+    elif cfg.family == "ssm":          # xlstm: mLSTM stack + periodic sLSTM
+        n_s = cfg.n_layers // cfg.slstm_every if cfg.slstm_every else 0
+        n_m = cfg.n_layers - n_s
+        params["mlstm"] = stack_layers(
+            keys[2], n_m, lambda k: mlstm_init(k, cfg, dtype))
+        if n_s:
+            params["slstm"] = stack_layers(
+                keys[3], n_s, lambda k: slstm_init(k, cfg, dtype))
+    else:
+        raise ValueError(cfg.family)
+    return params
+
+
+# --------------------------------------------------------------------------
+# forward (training / prefill)
+# --------------------------------------------------------------------------
+
+def forward(params, cfg, tokens=None, embeds=None, *, impl="ref",
+            remat: bool = True, last_only: bool = False):
+    """tokens: [B, S] int32 (or embeds: [B, S, d] for stub-frontend archs).
+    Returns (logits [B, S, V], aux_loss)."""
+    if embeds is None:
+        x = params["embed"][tokens] * cfg.scale_emb
+    else:
+        x = embeds.astype(_dt(cfg)) * cfg.scale_emb
+    b, s = x.shape[:2]
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+
+    if cfg.family in ("dense", "moe"):
+        def body(carry, lp):
+            x, aux = carry
+            x, a = _dense_layer_apply(lp, cfg, x, positions, impl)
+            return (x, aux + a), None
+        body_fn = jax.checkpoint(body) if remat else body
+        (x, aux), _ = jax.lax.scan(body_fn, (x, jnp.float32(0)), params["layers"])
+    elif cfg.family == "hybrid":
+        every = cfg.attn_every or (cfg.n_layers + 1)
+
+        def body(carry, inp):
+            x, aux = carry
+            lp, idx = inp
+            x = x + mamba2_block(lp, cfg, x)
+            use_attn = (idx % every) == (every - 1)
+            shared = params["shared_attn"]
+
+            def with_attn(x):
+                h, _ = _dense_layer_apply(shared, cfg, x, positions, impl)
+                return h
+            x = jax.lax.cond(use_attn, with_attn, lambda x: x, x)
+            return (x, aux), None
+        body_fn = jax.checkpoint(body) if remat else body
+        (x, aux), _ = jax.lax.scan(
+            body_fn, (x, jnp.float32(0)),
+            (params["layers"], jnp.arange(cfg.n_layers)))
+    elif cfg.family == "ssm":
+        every = cfg.slstm_every or (cfg.n_layers + 1)
+        # interleave: positions k*every-1 are sLSTM; scan mLSTM stack, then
+        # apply sLSTM blocks at their positions (sequential python loop over
+        # the small sLSTM stack keeps the scan homogeneous).
+        def body(carry, lp):
+            x = carry
+            x = x + mlstm_block(lp, cfg, x)
+            return x, None
+        body_fn = jax.checkpoint(body) if remat else body
+        x, _ = jax.lax.scan(body_fn, x, params["mlstm"])
+        aux = jnp.float32(0)
+        if "slstm" in params:
+            n_s = jax.tree.leaves(params["slstm"])[0].shape[0]
+            for i in range(n_s):
+                x = x + slstm_block(layer_slice(params["slstm"], i), cfg, x)
+    else:
+        raise ValueError(cfg.family)
+
+    x = rmsnorm(params["ln_f"], x, cfg.norm_eps)
+    if last_only:      # prefill: only the next-token logits are needed
+        x = x[:, -1:]
+    w_out = params["embed"].T if cfg.tie_embeddings else params["unembed"]
+    logits = (x @ w_out).astype(jnp.float32)
+    # §Perf: the transpose of the ('model','data')-sharded embedding loses
+    # the vocab sharding — pin logits to vocab-sharded so the CE reduction
+    # runs sharded instead of materializing [B,S,V] replicated.
+    logits = maybe_constrain(logits, ("pod", "data"), None, "model")
+    return logits, aux
+
+
+# --------------------------------------------------------------------------
+# decode (one token, static cache)
+# --------------------------------------------------------------------------
+
+def init_cache(cfg, batch, max_len):
+    dtype = _dt(cfg)
+    if cfg.family in ("dense", "moe"):
+        return {"kv": jax.vmap(lambda _: init_kv_cache(cfg, batch, max_len, dtype))(
+            jnp.arange(cfg.n_layers))}
+    if cfg.family == "hybrid":
+        n_attn = cfg.n_layers // cfg.attn_every if cfg.attn_every else 0
+        return {
+            "ssm": jax.vmap(lambda _: mamba2_init_state(cfg, batch, dtype))(
+                jnp.arange(cfg.n_layers)),
+            "kv": jax.vmap(lambda _: init_kv_cache(cfg, batch, max_len, dtype))(
+                jnp.arange(max(n_attn, 1))),
+        }
+    if cfg.family == "ssm":
+        n_s = cfg.n_layers // cfg.slstm_every if cfg.slstm_every else 0
+        n_m = cfg.n_layers - n_s
+        cache = {"mlstm": jax.vmap(lambda _: mlstm_init_state(cfg, batch))(
+            jnp.arange(n_m))}
+        if n_s:
+            d = cfg.d_model
+            cache["slstm"] = {
+                "c": jnp.zeros((n_s, batch, d), jnp.float32),
+                "n": jnp.zeros((n_s, batch, d), jnp.float32),
+                "m": jnp.full((n_s, batch, d), -1e30, jnp.float32)}
+        return cache
+    raise ValueError(cfg.family)
+
+
+def decode_step(params, cfg, tokens, cache, pos):
+    """tokens: [B, 1]; pos: [] int32. Returns (logits [B, V], cache)."""
+    x = params["embed"][tokens] * cfg.scale_emb
+
+    if cfg.family in ("dense", "moe"):
+        def body(x_and_aux, inp):
+            x = x_and_aux
+            lp, lc = inp
+            h = rmsnorm(lp["ln1"], x, cfg.norm_eps)
+            h, lc_new = attention_decode(lp["attn"], cfg, h, lc, pos)
+            x = x + h
+            hin = rmsnorm(lp["ln2"], x, cfg.norm_eps)
+            if cfg.family == "moe":
+                h2, _ = moe_ffn(lp["moe"], cfg, hin)
+            else:
+                h2 = mlp(lp["mlp"], hin)
+            return x + h2, lc_new
+        x, kv = jax.lax.scan(body, x, (params["layers"], cache["kv"]))
+        cache = {"kv": kv}
+    elif cfg.family == "hybrid":
+        every = cfg.attn_every or (cfg.n_layers + 1)
+        ssm_states, kvs = cache["ssm"], cache["kv"]
+        new_ssm, new_kv = [], []
+        ai = 0
+        for i in range(cfg.n_layers):
+            lp = layer_slice(params["layers"], i)
+            st = jax.tree.map(lambda a: a[i], ssm_states)
+            h, st = mamba2_decode(lp, cfg, x, st)
+            x = x + h
+            new_ssm.append(st)
+            if (i % every) == (every - 1):
+                lc = jax.tree.map(lambda a: a[ai], kvs)
+                shared = params["shared_attn"]
+                h = rmsnorm(shared["ln1"], x, cfg.norm_eps)
+                h, lc = attention_decode(shared["attn"], cfg, h, lc, pos)
+                x = x + h
+                h2 = mlp(shared["mlp"], rmsnorm(shared["ln2"], x, cfg.norm_eps))
+                x = x + h2
+                new_kv.append(lc)
+                ai += 1
+        cache = {"ssm": jax.tree.map(lambda *a: jnp.stack(a), *new_ssm),
+                 "kv": jax.tree.map(lambda *a: jnp.stack(a), *new_kv)}
+    elif cfg.family == "ssm":
+        def body(x, inp):
+            lp, st = inp
+            h, st = mlstm_decode(lp, cfg, x, st)
+            return x + h, st
+        x, mst = jax.lax.scan(body, x, (params["mlstm"], cache["mlstm"]))
+        new_cache = {"mlstm": mst}
+        if "slstm" in cache:
+            n_s = cache["slstm"]["c"].shape[0]
+            new_states = []
+            for i in range(n_s):
+                lp = layer_slice(params["slstm"], i)
+                st = jax.tree.map(lambda a: a[i], cache["slstm"])
+                h, st = slstm_decode(lp, cfg, x, st)
+                x = x + h
+                new_states.append(st)
+            new_cache["slstm"] = jax.tree.map(lambda *a: jnp.stack(a),
+                                              *new_states)
+        cache = new_cache
+    else:
+        raise ValueError(cfg.family)
+
+    x = rmsnorm(params["ln_f"], x, cfg.norm_eps)
+    w_out = params["embed"].T if cfg.tie_embeddings else params["unembed"]
+    return (x[:, 0] @ w_out).astype(jnp.float32), cache

@@ -1,0 +1,64 @@
+"""Architecture zoo: uniform entry points keyed by config.
+
+    model = zoo.build(cfg)
+    params = model.init(key)
+    logits, aux = model.forward(params, batch)     # training path
+    cache = model.init_cache(batch, max_len)
+    logits, cache = model.decode_step(params, tok, cache, pos)
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from . import encdec, transformer
+
+
+@dataclasses.dataclass
+class Model:
+    cfg: ModelConfig
+    init: Callable
+    forward: Callable            # (params, batch_dict, impl=...) → (logits, aux)
+    init_cache: Callable
+    decode_step: Callable
+
+
+def build(cfg: ModelConfig) -> Model:
+    if cfg.family == "encdec":
+        def fwd(params, batch, impl="ref", remat=True, last_only=False):
+            return encdec.forward(params, cfg, batch["embeds"],
+                                  batch["tokens"], impl=impl, remat=remat,
+                                  last_only=last_only)
+
+        def dec(params, tokens, cache, pos, impl="ref"):
+            return encdec.decode_step(params, cfg, tokens, cache, pos, impl=impl)
+
+        return Model(
+            cfg=cfg,
+            init=lambda key: encdec.init(key, cfg),
+            forward=fwd,
+            init_cache=lambda batch, max_len, enc_len=None: encdec.init_cache(
+                cfg, batch, max_len, enc_len or max_len),
+            decode_step=dec,
+        )
+
+    def fwd(params, batch, impl="ref", remat=True, last_only=False):
+        if cfg.input_kind == "embeddings":
+            return transformer.forward(params, cfg, embeds=batch["embeds"],
+                                       impl=impl, remat=remat,
+                                       last_only=last_only)
+        return transformer.forward(params, cfg, tokens=batch["tokens"],
+                                   impl=impl, remat=remat, last_only=last_only)
+
+    return Model(
+        cfg=cfg,
+        init=lambda key: transformer.init(key, cfg),
+        forward=fwd,
+        init_cache=lambda batch, max_len: transformer.init_cache(cfg, batch, max_len),
+        decode_step=lambda params, tokens, cache, pos: transformer.decode_step(
+            params, cfg, tokens, cache, pos),
+    )

@@ -1,0 +1,56 @@
+"""Minimal serving engine: batched greedy generation against the decode path.
+
+Production shape note: the dry-run's `serve_step` (launch/dryrun.py) is the
+deployable unit — one decode step over a static KV cache at the assigned
+(decode_32k / long_500k) shapes. This engine drives the same step for the
+runnable examples: prefill fills the cache token-by-token (fine at demo
+scale; at production scale prefill lowers the chunked-forward path), then
+greedy decode continues the batch.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass
+class GenerationResult:
+    tokens: np.ndarray          # [B, prompt+new]
+    steps: int
+
+
+class ServeEngine:
+    def __init__(self, model, params, *, max_len: int = 256, batch_size: int = 4):
+        self.model = model
+        self.params = params
+        self.max_len = max_len
+        self.batch_size = batch_size
+        self._decode = jax.jit(model.decode_step)
+
+    def generate(self, prompts: np.ndarray, new_tokens: int) -> GenerationResult:
+        """prompts: [B, S] int32 (right-aligned, no padding support needed
+        for the demo). Greedy continuation of `new_tokens` tokens."""
+        b, s = prompts.shape
+        assert b <= self.batch_size and s + new_tokens <= self.max_len
+        cache = self.model.init_cache(b, self.max_len)
+        toks = jnp.asarray(prompts, jnp.int32)
+        logits = None
+        for i in range(s):   # prefill via the decode path
+            logits, cache = self._decode(self.params, toks[:, i:i + 1], cache,
+                                         jnp.int32(i))
+        out = [toks]
+        cur = jnp.argmax(logits, axis=-1)[:, None].astype(jnp.int32)
+        for j in range(new_tokens):
+            out.append(cur)
+            if j == new_tokens - 1:
+                break
+            logits, cache = self._decode(self.params, cur, cache,
+                                         jnp.int32(s + j))
+            cur = jnp.argmax(logits, axis=-1)[:, None].astype(jnp.int32)
+        return GenerationResult(
+            tokens=np.asarray(jnp.concatenate(out, axis=1)),
+            steps=s + new_tokens)

@@ -1,0 +1,95 @@
+"""AdamW with WSD (warmup-stable-decay) and cosine schedules.
+
+WSD is minicpm-2b's paper-of-record trick (arXiv:2404.06395): LR warms up,
+holds at peak for most of training, then decays sharply in the final
+fraction — implemented natively so the minicpm config trains as published.
+
+Optimizer state is a pytree shaped like params (m, v in f32) so it inherits
+the params' NamedSharding — ZeRO-style sharded optimizer state for free.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from functools import partial
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class OptimizerConfig:
+    lr: float = 3e-4
+    betas: tuple = (0.9, 0.95)
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    schedule: str = "cosine"          # cosine | wsd | constant
+    wsd_decay_frac: float = 0.1       # last 10% decays (minicpm)
+    min_lr_frac: float = 0.1
+
+
+def lr_at(oc: OptimizerConfig, step):
+    step = jnp.asarray(step, jnp.float32)
+    warm = jnp.minimum(step / jnp.maximum(oc.warmup_steps, 1), 1.0)
+    if oc.schedule == "constant":
+        return oc.lr * warm
+    if oc.schedule == "wsd":
+        decay_start = oc.total_steps * (1.0 - oc.wsd_decay_frac)
+        frac = jnp.clip((step - decay_start)
+                        / jnp.maximum(oc.total_steps - decay_start, 1), 0, 1)
+        decay = 1.0 - (1.0 - oc.min_lr_frac) * frac
+        return oc.lr * warm * decay
+    # cosine
+    frac = jnp.clip(step / oc.total_steps, 0, 1)
+    cos = 0.5 * (1 + jnp.cos(jnp.pi * frac))
+    return oc.lr * warm * (oc.min_lr_frac + (1 - oc.min_lr_frac) * cos)
+
+
+def init_opt_state(params):
+    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return {"m": jax.tree.map(zeros, params),
+            "v": jax.tree.map(zeros, params),
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def global_norm(tree):
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree.leaves(tree)))
+
+
+def adamw_update(oc: OptimizerConfig, params, grads, opt_state):
+    """Returns (new_params, new_opt_state, metrics)."""
+    step = opt_state["step"] + 1
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, oc.grad_clip / jnp.maximum(gnorm, 1e-9)) \
+        if oc.grad_clip else 1.0
+    lr = lr_at(oc, step)
+    b1, b2 = oc.betas
+    bc1 = 1 - b1 ** step.astype(jnp.float32)
+    bc2 = 1 - b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        g = g.astype(jnp.float32) * scale
+        m = b1 * m + (1 - b1) * g
+        v = b2 * v + (1 - b2) * g * g
+        mhat = m / bc1
+        vhat = v / bc2
+        delta = mhat / (jnp.sqrt(vhat) + oc.eps)
+        if oc.weight_decay and p.ndim >= 2:   # decay matrices only
+            delta = delta + oc.weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * delta).astype(p.dtype), m, v
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_m = treedef.flatten_up_to(opt_state["m"])
+    flat_v = treedef.flatten_up_to(opt_state["v"])
+    out = [upd(p, g, m, v) for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
+    new_p = treedef.unflatten([o[0] for o in out])
+    new_m = treedef.unflatten([o[1] for o in out])
+    new_v = treedef.unflatten([o[2] for o in out])
+    return new_p, {"m": new_m, "v": new_v, "step": step}, \
+        {"lr": lr, "grad_norm": gnorm}

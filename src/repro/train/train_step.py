@@ -1,0 +1,86 @@
+"""Train step: loss, gradients (with remat + microbatch accumulation),
+optimizer update.
+
+Microbatching serves two masters: activation memory on real hardware and
+MoE dispatch-tensor size everywhere (see models/moe.py) — gradients are
+accumulated over `microbatches` sequential slices via lax.scan, so one
+compiled step handles any global batch. Straggler note: the step is
+shape-static and data-independent — a slow host delays only its own psum,
+never causes retraces.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from .optimizer import OptimizerConfig, adamw_update, init_opt_state
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class TrainState:
+    params: dict
+    opt: dict
+
+    @property
+    def step(self):
+        return self.opt["step"]
+
+
+def init_state(model, key) -> TrainState:
+    params = model.init(key)
+    return TrainState(params=params, opt=init_opt_state(params))
+
+
+def cross_entropy(logits, labels):
+    """logits [B,S,V] f32; labels [B,S] int32. Mean NLL."""
+    logz = jax.scipy.special.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    return jnp.mean(logz - gold)
+
+
+def make_loss_fn(model, *, impl="ref", remat=True):
+    def loss_fn(params, batch):
+        logits, aux = model.forward(params, batch, impl=impl, remat=remat)
+        ce = cross_entropy(logits, batch["labels"])
+        return ce + aux, {"ce": ce, "aux": aux}
+    return loss_fn
+
+
+def make_train_step(model, oc: OptimizerConfig, *, microbatches: int = 1,
+                    impl="ref", remat=True) -> Callable:
+    """Returns train_step(state, batch) → (state, metrics). The batch's
+    leading dim must divide by `microbatches`."""
+    loss_fn = make_loss_fn(model, impl=impl, remat=remat)
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def train_step(state: TrainState, batch: dict):
+        if microbatches == 1:
+            (loss, parts), grads = grad_fn(state.params, batch)
+        else:
+            mb = jax.tree.map(
+                lambda x: x.reshape((microbatches, x.shape[0] // microbatches)
+                                    + x.shape[1:]), batch)
+
+            def acc(carry, mbatch):
+                g_acc, l_acc, ce_acc = carry
+                (l, parts), g = grad_fn(state.params, mbatch)
+                g_acc = jax.tree.map(lambda a, b: a + b.astype(a.dtype), g_acc, g)
+                return (g_acc, l_acc + l, ce_acc + parts["ce"]), None
+
+            zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                                 state.params)
+            (grads, loss, ce), _ = jax.lax.scan(
+                acc, (zeros, jnp.float32(0), jnp.float32(0)), mb)
+            grads = jax.tree.map(lambda g: g / microbatches, grads)
+            loss = loss / microbatches
+            parts = {"ce": ce / microbatches, "aux": loss - ce / microbatches}
+        new_params, new_opt, om = adamw_update(oc, state.params, grads, state.opt)
+        metrics = {"loss": loss, **parts, **om}
+        return TrainState(params=new_params, opt=new_opt), metrics
+
+    return train_step

@@ -1,0 +1,35 @@
+import os
+import sys
+
+# tests see ONE device (the dry-run pins 512 in its own process only)
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import numpy as np
+import pytest
+
+from repro.graph import road, small_world, uniform_random
+
+
+@pytest.fixture(scope="session")
+def g_small():
+    return uniform_random(64, 4, seed=0)
+
+
+@pytest.fixture(scope="session")
+def g_medium():
+    return uniform_random(100, 5, seed=2)
+
+
+@pytest.fixture(scope="session")
+def g_road():
+    return road(10, seed=3)
+
+
+@pytest.fixture(scope="session")
+def g_social():
+    return small_world(96, 8, 0.2, seed=4)
+
+
+@pytest.fixture(scope="session")
+def graph_suite(g_medium, g_road, g_social):
+    return {"UR": g_medium, "RD": g_road, "SW": g_social}

@@ -1,0 +1,42 @@
+"""Beyond-paper DSL program: connected components (label propagation).
+Shows the language is not hard-wired to the four published algorithms."""
+import networkx as nx
+import numpy as np
+import pytest
+
+from repro.core import compile_bundled
+
+
+def _cc_ref(g):
+    G = nx.Graph()
+    G.add_nodes_from(range(g.num_nodes))
+    G.add_edges_from(zip(np.asarray(g.edge_src).tolist(),
+                         np.asarray(g.indices).tolist()))
+    ref = np.zeros(g.num_nodes, np.int64)
+    for comp in nx.connected_components(G):
+        ref[list(comp)] = min(comp)
+    return ref
+
+
+@pytest.mark.parametrize("gname", ["RD", "SW"])   # undirected families
+def test_cc_matches_networkx(graph_suite, gname):
+    g = graph_suite[gname]
+    out = compile_bundled("cc")(g)
+    comp = np.asarray(out["comp"]).astype(np.int64)
+    assert np.array_equal(comp, _cc_ref(g))
+    assert bool(out["finished"])
+
+
+def test_cc_two_components():
+    from repro.graph import from_edges
+    g = from_edges(6, np.array([0, 1, 3, 4]), np.array([1, 2, 4, 5]),
+                   undirected=True)
+    comp = np.asarray(compile_bundled("cc")(g)["comp"])
+    assert comp.tolist() == [0, 0, 0, 3, 3, 3]
+
+
+def test_cc_pallas_backend(graph_suite):
+    g = graph_suite["SW"]
+    out_l = compile_bundled("cc", backend="local")(g)
+    out_p = compile_bundled("cc", backend="pallas")(g)
+    assert np.array_equal(np.asarray(out_l["comp"]), np.asarray(out_p["comp"]))

@@ -1,0 +1,130 @@
+"""DSL frontend: lexer, parser, AST shape, semantic analysis, IR lowering."""
+import pytest
+
+from repro.core import ast_nodes as A
+from repro.core import ir as I
+from repro.core.api import load_program_source
+from repro.core.lexer import LexError, tokenize
+from repro.core.lowering import LowerError, lower
+from repro.core.parser import ParseError, parse
+from repro.core.semantic import SemanticError, analyze
+
+ALL_PROGRAMS = ["sssp", "sssp_pull", "pr", "tc", "bc"]
+
+
+def test_lexer_basic():
+    toks = tokenize("forall(v in g.nodes()) { v.dist = 0; }")
+    kinds = [t.kind for t in toks]
+    assert kinds[0] == "kw" and toks[0].value == "forall"
+    assert toks[-1].kind == "eof"
+
+
+def test_lexer_operators():
+    toks = tokenize("a += b; c &&= d; e ++; <f, g>")
+    vals = [t.value for t in toks if t.kind == "sym"]
+    assert "+=" in vals and "&&=" in vals and "++" in vals
+
+
+def test_lexer_comments():
+    toks = tokenize("// comment\n/* block\ncomment */ x")
+    assert [t.value for t in toks if t.kind == "id"] == ["x"]
+
+
+def test_lexer_error():
+    with pytest.raises(LexError):
+        tokenize("a $ b")
+
+
+@pytest.mark.parametrize("name", ALL_PROGRAMS)
+def test_paper_programs_parse(name):
+    prog = parse(load_program_source(name))
+    assert len(prog.functions) == 1
+    fn = prog.functions[0]
+    assert fn.params[0].ty.name == "Graph"
+
+
+def test_sssp_ast_structure():
+    prog = parse(load_program_source("sssp"))
+    fn = prog.functions[0]
+    fp = [s for s in fn.body.stmts if isinstance(s, A.FixedPointStmt)]
+    assert len(fp) == 1 and fp[0].var == "finished"
+    outer = fp[0].body.stmts[0]
+    assert isinstance(outer, A.ForallStmt) and outer.parallel
+    assert isinstance(outer.filter_expr, A.BinaryOp)
+    inner = outer.body.stmts[0]
+    assert isinstance(inner, A.ForallStmt)
+    multi = inner.body.stmts[-1]
+    assert isinstance(multi, A.MultiAssignmentStmt)
+    assert isinstance(multi.values[0], A.MinMaxExpr)
+
+
+def test_bc_bfs_reverse_attached():
+    prog = parse(load_program_source("bc"))
+    fn = prog.functions[0]
+    setloop = [s for s in fn.body.stmts if isinstance(s, A.ForallStmt)][0]
+    bfs = [s for s in setloop.body.stmts if isinstance(s, A.IterateInBFSStmt)]
+    assert len(bfs) == 1 and bfs[0].reverse is not None
+
+
+def test_parse_error_missing_semicolon():
+    with pytest.raises(ParseError):
+        parse("function f(Graph g) { int x = 1 }")
+
+
+def test_semantic_undefined_variable():
+    with pytest.raises(SemanticError):
+        analyze(parse("function f(Graph g) { x = 1; }"))
+
+
+def test_semantic_requires_graph():
+    with pytest.raises(SemanticError):
+        analyze(parse("function f(int x) { int y = x; }"))
+
+
+@pytest.mark.parametrize("name", ALL_PROGRAMS)
+def test_paper_programs_lower(name):
+    irs = lower(parse(load_program_source(name)))
+    assert len(irs) == 1
+    irf = irs[0]
+    assert irf.graph_param == "g"
+
+
+def test_sssp_ir_canonical():
+    irf = lower(parse(load_program_source("sssp")))[0]
+    fps = [s for s in irf.body if isinstance(s, I.IFixedPoint)]
+    assert len(fps) == 1 and fps[0].conv_prop == "modified"
+    vloop = fps[0].body[0]
+    assert isinstance(vloop, I.IVertexLoop)
+    nloop = vloop.body[0]
+    assert isinstance(nloop, I.INbrLoop) and nloop.direction == "out"
+    mm = nloop.body[0]
+    assert isinstance(mm, I.IMinMaxUpdate)
+    assert mm.prop == "dist" and mm.target == "nbr" and mm.kind == "Min"
+    assert mm.extras[0][0] == "modified"
+
+
+def test_reduction_folding():
+    """`x = x + t` folds to a reduce-assign (paper Fig. 5)."""
+    src = """function f(Graph g, propNode<float> A) {
+        float acc = 0;
+        forall(v in g.nodes()) { acc = acc + v.A; }
+    }"""
+    irf = lower(parse(src))[0]
+    vloop = [s for s in irf.body if isinstance(s, I.IVertexLoop)][0]
+    asg = vloop.body[0]
+    assert isinstance(asg, I.IAssign) and asg.reduce_op == "+"
+
+
+def test_fixed_point_requires_bool_prop():
+    src = """function f(Graph g) {
+        bool finished = False;
+        fixedPoint until (finished : !finished) { }
+    }"""
+    with pytest.raises((LowerError, SemanticError)):
+        lower(parse(src))
+
+
+def test_written_and_read_analysis():
+    irf = lower(parse(load_program_source("sssp")))[0]
+    assert {"dist", "modified"} <= I.written_vars(irf.body)
+    assert {"dist", "modified"} <= I.read_props(irf.body)

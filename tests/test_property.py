@@ -1,0 +1,115 @@
+"""Property-based tests (hypothesis) on system invariants."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import compile_bundled
+from repro.graph import from_edges
+from repro.graph.csr import INF_I32, to_ell
+from repro.graph.partition import block_partition_1d, partition_2d
+
+
+def graphs(max_n=24, max_e=80):
+    @st.composite
+    def _g(draw):
+        n = draw(st.integers(2, max_n))
+        e = draw(st.integers(1, max_e))
+        src = draw(st.lists(st.integers(0, n - 1), min_size=e, max_size=e))
+        dst = draw(st.lists(st.integers(0, n - 1), min_size=e, max_size=e))
+        w = draw(st.lists(st.integers(1, 50), min_size=e, max_size=e))
+        return from_edges(n, np.array(src), np.array(dst), np.array(w),
+                          drop_self_loops=True)
+    return _g()
+
+
+@settings(max_examples=25, deadline=None)
+@given(graphs())
+def test_csr_roundtrip(g):
+    """CSR → COO → CSR preserves the edge set; degrees sum to E."""
+    src = np.asarray(g.edge_src)
+    dst = np.asarray(g.indices)
+    assert int(np.asarray(g.out_degree).sum()) == g.num_edges
+    assert int(np.asarray(g.in_degree).sum()) == g.num_edges
+    g2 = from_edges(g.num_nodes, src, dst, np.asarray(g.weights))
+    assert np.array_equal(np.asarray(g2.indptr), np.asarray(g.indptr))
+    assert np.array_equal(np.asarray(g2.indices), np.asarray(g.indices))
+
+
+@settings(max_examples=20, deadline=None)
+@given(graphs())
+def test_partition_covers_all_edges(g):
+    for p in (2, 3, 4):
+        part = block_partition_1d(g, p)
+        assert int(part.valid.sum()) == g.num_edges
+    part2 = partition_2d(g, 2, 2)
+    assert int(part2.valid.sum()) == g.num_edges
+
+
+@settings(max_examples=15, deadline=None)
+@given(graphs())
+def test_sssp_triangle_inequality_and_fixpoint(g):
+    """dist[v] ≤ dist[u] + w(u,v) for every edge, and dist is a fixed point."""
+    prog = compile_bundled("sssp")
+    out = prog(g, src=0)
+    dist = np.asarray(out["dist"]).astype(np.int64)
+    src = np.asarray(g.edge_src)
+    dst = np.asarray(g.indices)
+    w = np.asarray(g.weights).astype(np.int64)
+    reachable = dist[src] < INF_I32
+    assert np.all(dist[dst][reachable] <= (dist[src] + w)[reachable])
+    assert dist[0] == 0
+    out2 = prog(g, src=0)   # idempotent
+    assert np.array_equal(np.asarray(out2["dist"]), dist.astype(np.int32))
+
+
+@settings(max_examples=10, deadline=None)
+@given(graphs())
+def test_pagerank_mass(g):
+    """PR values positive; sum ≤ 1 + ε (dangling mass leaks, never grows)."""
+    prog = compile_bundled("pr")
+    pr = np.asarray(prog(g, beta=1e-5, delta=0.85, maxIter=100)["pageRank"])
+    assert np.all(pr >= 0)
+    assert pr.sum() <= 1.0 + 1e-3
+
+
+@settings(max_examples=10, deadline=None)
+@given(graphs(), st.randoms())
+def test_tc_invariant_under_edge_permutation(g, rnd):
+    """Triangle count is a graph invariant — edge insertion order must not
+    matter (exercises CSR construction + dedup)."""
+    prog = compile_bundled("tc")
+    base = int(prog(g)["triangle_count"])
+    src = np.asarray(g.edge_src)
+    dst = np.asarray(g.indices)
+    w = np.asarray(g.weights)
+    perm = np.array(rnd.sample(range(len(src)), len(src)), np.int64)
+    g2 = from_edges(g.num_nodes, src[perm], dst[perm], w[perm])
+    assert int(prog(g2)["triangle_count"]) == base
+
+
+@settings(max_examples=15, deadline=None)
+@given(graphs())
+def test_bfs_levels_valid(g):
+    """Every BFS tree edge spans exactly one level; unreached stay -1."""
+    import jax.numpy as jnp
+    from repro.core.runtime import bfs_levels
+    level, depth = bfs_levels(g, 0)
+    level = np.asarray(level)
+    src = np.asarray(g.edge_src)
+    dst = np.asarray(g.indices)
+    on = (level[src] >= 0)
+    assert np.all(level[dst][on] >= 0)                    # reachability closed
+    assert np.all(level[dst][on] <= level[src][on] + 1)   # no level skipping
+    assert level[0] == 0
+
+
+@settings(max_examples=15, deadline=None)
+@given(graphs())
+def test_ell_view_preserves_edges(g):
+    ell = to_ell(g)
+    cols = np.asarray(ell.cols)
+    n = g.num_nodes
+    got = sorted((i, int(c)) for i in range(n) for c in cols[i] if c < n)
+    want = sorted(zip(np.asarray(g.edge_src).tolist(),
+                      np.asarray(g.indices).tolist()))
+    assert got == want
