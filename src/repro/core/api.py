@@ -75,17 +75,17 @@ def compile_program(source: str, backend: str = "local", fn_name: Optional[str] 
     # CSRGraph is a registered pytree with static num_nodes/num_edges metadata,
     # so the graph argument is dynamic (arrays) + static (sizes) automatically.
     if backend == "pallas":
-        from ..kernels.ell_spmv.ops import prepare_ell
+        from ..kernels.ell_spmv.ops import prepare_sliced_ell
         jitted = jax.jit(raw) if jit else raw
         _ell_cache = {}
 
         def fn(g, **kw):
             key = id(g)
             if key not in _ell_cache:
-                cols, wts, _ = prepare_ell(g, reverse=True)
-                _ell_cache[key] = (g, cols, wts)   # keep g alive with its ELL
-            _, cols, wts = _ell_cache[key]
-            return jitted(g, cols, wts, **kw)
+                # degree-bucketed reverse (in-edge) view, built once per graph
+                _ell_cache[key] = (g, prepare_sliced_ell(g, reverse=True))
+            _, ell = _ell_cache[key]
+            return jitted(g, ell, **kw)
     else:
         fn = jax.jit(raw) if jit and backend == "local" else raw
     prog = CompiledProgram(name=irfn.name, backend=backend, source=src,

@@ -96,6 +96,11 @@ class EdgeCtx:
     seg: str = ""                # py expr: segment ids for reductions to the source
     seg_sorted: bool = True      # seg array sorted (CSR row order)?
     mask: Optional[str] = None   # [E] bool mask var, or None
+    # frontier-engine bookkeeping: the [N] vertex masks the edge mask was
+    # derived from, when it was derived from nothing else (`pure_frontier`).
+    src_vmask: Optional[str] = None  # [N] mask of the source side (vertex filter)
+    it_vmask: Optional[str] = None   # [N] mask of the neighbor side (nbr filter)
+    pure_frontier: bool = False      # mask == exactly those vmask gathers
     parent: object = None
     kind: str = "edge"
 
@@ -114,6 +119,50 @@ def ctx_chain(ctx):
     while ctx is not None:
         yield ctx
         ctx = getattr(ctx, "parent", None)
+
+
+# --------------------------------------------------------------------------
+# Pattern helpers (frontier-engine hot-path detection)
+# --------------------------------------------------------------------------
+
+def prop_plus_weight(cand, other_side: str):
+    """Match `<other>.prop + e.weight` (either order) → prop name, or None."""
+    if not isinstance(cand, I.IBin) or cand.op != "+":
+        return None
+    a, b = cand.left, cand.right
+    for x, y in ((a, b), (b, a)):
+        if isinstance(x, I.IProp) and x.target == other_side and \
+                isinstance(y, I.IEdgeWeight):
+            return x.prop
+    return None
+
+
+def pure_vertex_predicate(expr, side: str) -> bool:
+    """True if `expr` reads only <side>.prop, constants, and host scalars —
+    i.e. it can be evaluated once as an [N] vertex mask instead of per edge.
+    Rejects edge weights, foreign iterators, and vertex-local scalars (which
+    are aligned to the *outer* vertex, not `side`)."""
+    ok = True
+
+    def visit(e):
+        nonlocal ok
+        if isinstance(e, I.IProp):
+            if e.target != side:
+                ok = False
+        elif isinstance(e, (I.IEdgeWeight, I.IVertexLocal)):
+            ok = False
+        elif isinstance(e, I.IIterId) and e.name != side:
+            ok = False
+        elif isinstance(e, I.IBin):
+            visit(e.left); visit(e.right)
+        elif isinstance(e, I.IUn):
+            visit(e.operand)
+        elif isinstance(e, I.ICall):
+            for a in e.args:
+                visit(a)
+
+    visit(expr)
+    return ok
 
 
 class ExprEmitter:

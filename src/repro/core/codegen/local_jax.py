@@ -14,7 +14,8 @@ from typing import List, Optional
 from .. import ir as I
 from ..ir import written_vars
 from .base import (BFSCtx, CodegenError, EdgeCtx, Emitter, ExprEmitter,
-                   HostCtx, VertexCtx, ctx_chain)
+                   HostCtx, VertexCtx, ctx_chain, prop_plus_weight,
+                   pure_vertex_predicate)
 
 _JNP_DTYPE = {"int32": "jnp.int32", "bool": "jnp.bool_",
               "float32": "jnp.float32", "float64": "jnp.float32"}
@@ -207,10 +208,22 @@ class LocalCodegen:
                            w=f"{g}.rev_weights", seg=f"{g}.rev_edge_dst",
                            seg_sorted=True, mask=None, parent=ctx)
         terms = []
+        pure = True
         if vctx.mask:
             terms.append(f"{vctx.mask}[{ectx.vid}]")
+            ectx.src_vmask = vctx.mask
         if s.filter is not None:
-            terms.append(self.ex.expr(s.filter, ectx))
+            if pure_vertex_predicate(s.filter, s.it):
+                # neighbor-side filter that only reads nbr-props: hoist it to
+                # one [N] vertex mask (the frontier the engine switches on)
+                nm = em.uid("nm")
+                em.w(f"{nm} = {self.ex.expr(s.filter, VertexCtx(it=s.it, mask=None, parent=ctx))}")
+                terms.append(f"{nm}[{ectx.nid}]")
+                ectx.it_vmask = nm
+            else:
+                terms.append(self.ex.expr(s.filter, ectx))
+                pure = False
+        ectx.pure_frontier = pure
         if terms:
             mask = em.uid("em")
             em.w(f"{mask} = {' & '.join(terms)}")
@@ -275,6 +288,53 @@ class LocalCodegen:
             else:
                 em.w(f"{p} = {p} {op} ({e})")
 
+    def _hybrid_frontier(self, s: I.IMinMaxUpdate, ectx):
+        """Detect the frontier-relax pattern `Min(t.p, other.p + e.weight)`
+        where the contributing side is masked by nothing but a per-vertex
+        frontier. Returns (applicable, frontier_var_or_None)."""
+        if s.kind != "Min" or not ectx.pure_frontier:
+            return False, None
+        if self.f.node_props.get(s.prop) != "int32":
+            return False, None
+        if s.target == ectx.it and ectx.direction == "out":
+            # push form: the outer vertex contributes along its out-edges
+            other, frontier = ectx.source, ectx.src_vmask
+            if ectx.it_vmask is not None:
+                return False, None      # extra mask on the landing side
+        elif s.target == ectx.source and ectx.direction == "in":
+            # pull form: in-neighbors contribute into the outer vertex
+            other, frontier = ectx.it, ectx.it_vmask
+            if ectx.src_vmask is not None:
+                return False, None
+        else:
+            return False, None
+        if prop_plus_weight(s.cand, other) != s.prop:
+            return False, None
+        return True, frontier
+
+    def emit_relax_hybrid(self, s: I.IMinMaxUpdate, frontier):
+        """Direction-optimized relax step: push (scatter-min from frontier
+        sources) vs pull (segment-min over in-edges), switched on-device by
+        frontier occupancy. Both branches compute the identical relaxation.
+        Emitted inline (not as a call to rt.relax_minplus_hybrid, which is
+        the same computation — keep in sync) so the generated source shows
+        the full lowering, per the paper's source-to-source design."""
+        em = self.em
+        g = self.f.graph_param
+        new = em.uid("new")
+        if frontier is None:
+            em.w(f"{new} = rt.relax_minplus_hybrid({g}, {s.prop}, None)")
+            return new
+        push, pull = em.uid("push"), em.uid("pull")
+        em.w(f"{push} = lambda _d: rt.scatter_min(_d, {g}.indices, "
+             f"jnp.where({frontier}[{g}.edge_src], _d[{g}.edge_src] + {g}.weights, rt.INF))")
+        em.w(f"{pull} = lambda _d: jnp.minimum(_d, rt.segment_min("
+             f"jnp.where({frontier}[{g}.rev_indices], _d[{g}.rev_indices] + {g}.rev_weights, rt.INF), "
+             f"{g}.rev_edge_dst, {self.VLEN}))")
+        em.w(f"{new} = jax.lax.cond(rt.frontier_should_push({frontier}, {self.VLEN}), "
+             f"{push}, {pull}, {s.prop})")
+        return new
+
     def s_IMinMaxUpdate(self, s: I.IMinMaxUpdate, ctx):
         em = self.em
         ectx = self._edge_ctx(ctx)
@@ -282,6 +342,18 @@ class LocalCodegen:
             raise CodegenError("Min/Max update outside a neighbor loop")
         p = self.wtarget(s.prop)
         dtype = self.f.node_props.get(s.prop, "int32")
+        ok, frontier = self._hybrid_frontier(s, ectx)
+        if ok:
+            new = self.emit_relax_hybrid(s, frontier)
+            upd = em.uid("upd")
+            em.w(f"{upd} = {new} < {s.prop}")
+            em.w(f"{p} = {new}" if p == s.prop else
+                 f"{p} = jnp.where({upd}, {new}, {p})")
+            for eprop, _etgt, eval_ in s.extras:
+                ep = self.wtarget(eprop)
+                ev = self.ex.expr(eval_, HostCtx())
+                em.w(f"{ep} = jnp.where({upd}, {ev}, {ep})")
+            return
         cand = self.ex.expr(s.cand, ctx)
         cv = em.uid("cand")
         ident = f"rt.inf_for({self.jdt(dtype)})" if s.kind == "Min" else f"-rt.inf_for({self.jdt(dtype)})"
@@ -319,7 +391,7 @@ class LocalCodegen:
             cond = self.ex.expr(s.cond, ctx)
             em.w(f"{mask} = {f'{ectx.mask} & ' if ectx.mask else ''}{cond}")
             import dataclasses as _dc
-            sub = _dc.replace(ectx, mask=mask)
+            sub = _dc.replace(ectx, mask=mask, pure_frontier=False)
             self.body(s.then, sub)
             if s.els:
                 raise CodegenError("else in edge context unsupported")

@@ -3,18 +3,19 @@
 The CUDA backend turns each outermost `forall` into a kernel launch with
 thread-per-vertex + atomics (paper §3.2). TPU has no SIMT threads and no
 atomics, so this backend restructures the two hot patterns into blocked
-dense Pallas kernels (see kernels/ell_spmv):
+dense Pallas kernels (see kernels/ell_spmv), now over the degree-bucketed
+sliced-ELL view with frontier-aware direction optimization:
 
-  * Min/Max edge relaxation  → block-ELL min-plus SpMV over the REVERSE
-    (in-edge) ELL view. Push becomes pull: instead of scattering
-    atomicMin(&dist[nbr], ...) we gather min over in-neighbors — same
-    fixed point, zero write contention. The frontier filter is dropped:
-    relaxation is monotone-idempotent, so relaxing from non-modified
-    sources cannot change the result, and the dense sweep keeps the MXU/VPU
-    pipelines regular (the TPU version of "enough parallelism to keep the
-    resources busy").
-  * neighborhood sum reductions (PR) → block-ELL (+,×) SpMV of a per-node
-    contribution vector.
+  * Min/Max edge relaxation  → per-bucket min-plus SpMV over the REVERSE
+    (in-edge) sliced-ELL view, masked to the current frontier, with an
+    on-device switch to scatter-push over the CSR out-edges when the
+    frontier is sparse (Beamer-style direction optimization). The frontier
+    is the fixedPoint convergence property, threaded through the generated
+    while_loop carry; each relax recomputes it from the update mask. Pull
+    from non-frontier sources cannot change the result (relaxation is
+    monotone-idempotent), so push and pull branches agree exactly.
+  * neighborhood sum reductions (PR) → per-bucket (+,×) SpMV of a per-node
+    contribution vector (plus the COO hub fallback inside the op).
 
 Everything else (BFS, scalar reductions, fixed point) inherits the local
 backend's vectorized lowering — those are memory-bound scatter/gathers XLA
@@ -25,18 +26,6 @@ from __future__ import annotations
 from .. import ir as I
 from .base import CodegenError, EdgeCtx, HostCtx, VertexCtx
 from .local_jax import LocalCodegen, _RED
-
-
-def _prop_plus_weight(cand, other_side: str):
-    """Match `<other>.prop + e.weight` (either order) → prop name, or None."""
-    if not isinstance(cand, I.IBin) or cand.op != "+":
-        return None
-    a, b = cand.left, cand.right
-    for x, y in ((a, b), (b, a)):
-        if isinstance(x, I.IProp) and x.target == other_side and \
-                isinstance(y, I.IEdgeWeight):
-            return x.prop
-    return None
 
 
 def _only_reads_side(expr, side: str) -> bool:
@@ -71,8 +60,7 @@ class PallasCodegen(LocalCodegen):
         f, em = self.f, self.em
         g = f.graph_param
         args = [p.name for p in f.params]
-        sig = ", ".join([args[0], "_ell_cols", "_ell_wts"]
-                        + [f"{a}=None" for a in args[1:]])
+        sig = ", ".join([args[0], "_ell"] + [f"{a}=None" for a in args[1:]])
         em.w(f"def {f.name}({sig}):")
         with em.block():
             em.w(f"N = {g}.num_nodes")
@@ -82,7 +70,7 @@ class PallasCodegen(LocalCodegen):
                     self.declare(p.name, p.dtype)
                     em.w(f"if {p.name} is None:")
                     with em.block():
-                        em.w(f"{p.name} = rt.init_prop(N, {self.jdt(p.dtype)})")
+                        em.w(f"{p.name} = rt.init_prop(N, {self.jdt(p.dtype)!s})")
                 elif p.kind == "scalar":
                     self.dtypes[p.name] = p.dtype
             for s in f.body:
@@ -91,33 +79,20 @@ class PallasCodegen(LocalCodegen):
             em.w(f"return {{{rets}}}")
         return em.source()
 
-    # ---- hot pattern 1: Min/Max relax → ELL min-plus kernel ------------------
-    def s_IMinMaxUpdate(self, s: I.IMinMaxUpdate, ctx):
-        ectx = self._edge_ctx(ctx)
-        if ectx is None:
-            raise CodegenError("Min/Max outside a neighbor loop")
-        if s.kind != "Min":
-            return super().s_IMinMaxUpdate(s, ctx)
-        # which side feeds the candidate? push: source side; pull: nbr side
-        other = ectx.source if s.target == ectx.it else ectx.it
-        prop = _prop_plus_weight(s.cand, other)
-        if prop != s.prop:
-            return super().s_IMinMaxUpdate(s, ctx)
+    # ---- hot pattern 1: frontier relax → sliced-ELL hybrid kernel ------------
+    def emit_relax_hybrid(self, s: I.IMinMaxUpdate, frontier):
+        """Same pattern the local backend detects, lowered to the kernel op:
+        per-bucket pull kernels over the reverse sliced-ELL view, or
+        scatter-push over the CSR edge arrays when the frontier is sparse
+        (the op owns the on-device occupancy switch)."""
         em = self.em
-        p = self.wtarget(s.prop)
+        g = self.f.graph_param
         new = em.uid("new")
-        # reverse-ELL pull sweep — the kernel includes min with the current
-        # value, so this is exactly one Bellman-Ford relaxation step.
-        em.w(f"{new} = kops.relax_minplus(_ell_cols, _ell_wts, {s.prop})")
-        upd = em.uid("upd")
-        em.w(f"{upd} = {new} < {s.prop}")
-        em.w(f"{p} = {new}" if p == s.prop else f"{p} = jnp.where({upd}, {new}, {p})")
-        for eprop, _t, eval_ in s.extras:
-            ep = self.wtarget(eprop)
-            ev = self.ex.expr(eval_, HostCtx())
-            em.w(f"{ep} = jnp.where({upd}, {ev}, {ep})")
+        fr = frontier or "None"
+        em.w(f"{new} = kops.relax_minplus(_ell, {s.prop}, frontier={fr}, csr={g})")
+        return new
 
-    # ---- hot pattern 2: neighborhood sum → ELL (+,×) kernel -------------------
+    # ---- hot pattern 2: neighborhood sum → sliced-ELL (+,×) kernel -----------
     def s_IAssign(self, s: I.IAssign, ctx):
         ectx = self._edge_ctx(ctx)
         if (s.reduce_op == "+" and s.vertex_local and ectx is not None
@@ -129,7 +104,7 @@ class PallasCodegen(LocalCodegen):
             vctx = VertexCtx(it=ectx.it, mask=None, parent=HostCtx())
             em.w(f"{contrib} = {self.ex.expr(s.expr, vctx)}")
             em.w(f"{contrib} = jnp.asarray({contrib}, jnp.float32) * jnp.ones((N,), jnp.float32)")
-            em.w(f"{s.name} = {s.name} + kops.gather_plustimes(_ell_cols, {contrib})[:N]")
+            em.w(f"{s.name} = {s.name} + kops.gather_plustimes(_ell, {contrib})")
             return
         super().s_IAssign(s, ctx)
 

@@ -67,10 +67,10 @@ def run_pod_parallel(prog, g: CSRGraph, mesh, source_set, **params):
 
     out_specs = {v: P(rtd.AXIS) for v in meta.get("out_props", [])}
     out_specs.update({v: P() for v in meta.get("out_scalars", [])})
-    fn = jax.jit(jax.shard_map(
+    fn = jax.jit(rtd.shard_map(
         pod_body, mesh=mesh,
         in_specs=(in_specs, P("pod")) + tuple(P() for _ in other),
-        out_specs=out_specs, check_vma=False))
+        out_specs=out_specs))
     out = fn(gd, jnp.asarray(srcs), *other)
     return {k: (v[: g.num_nodes] if k in meta.get("out_props", ()) else v)
             for k, v in out.items()}
@@ -86,12 +86,11 @@ def run_prepared(prog, gd: dict, mesh, *, num_nodes: int | None = None, **params
     out_specs.update({v: P() for v in meta.get("out_scalars", [])})
 
     body = prog.raw_fn
-    fn = jax.jit(jax.shard_map(
+    fn = jax.jit(rtd.shard_map(
         lambda gd_, *vs: body(gd_, **dict(zip(names, vs))),
         mesh=mesh,
         in_specs=(in_specs,) + tuple(P() for _ in vals),
         out_specs=out_specs,
-        check_vma=False,
     ))
     out = fn(gd, *vals)
     if num_nodes is not None:

@@ -27,6 +27,7 @@ from jax.sharding import PartitionSpec as P
 from ..graph.csr import CSRGraph, INF_I32
 from ..graph.partition import Partition2D, partition_2d
 from . import runtime as rt
+from .runtime_dist import shard_map as _shard_map
 
 DATA, MODEL = "data", "model"
 
@@ -106,11 +107,10 @@ def sssp_2d(g: CSRGraph, mesh, src: int = 0):
         dist, _ = jax.lax.while_loop(cond, step, (dist, jnp.bool_(False)))
         return dist
 
-    fn = jax.jit(jax.shard_map(
+    fn = jax.jit(_shard_map(
         body, mesh=mesh,
         in_specs=(P(DATA, MODEL, None),) * 4 + (P(),),
-        out_specs=P((DATA, MODEL)),
-        check_vma=False))
+        out_specs=P((DATA, MODEL))))
     out = fn(gd["src_local"], gd["dst_local"], gd["weight"], gd["valid"],
              jnp.int32(src))
     return out[: g.num_nodes]
@@ -165,10 +165,9 @@ def pagerank_2d(g: CSRGraph, mesh, delta: float = 0.85, beta: float = 1e-4,
             cond, step, (pr, jnp.float32(0), jnp.int32(0), jnp.bool_(True)))
         return pr
 
-    fn = jax.jit(jax.shard_map(
+    fn = jax.jit(_shard_map(
         body, mesh=mesh,
         in_specs=(P(DATA, MODEL, None),) * 3 + (P(MODEL, None),),
-        out_specs=P((DATA, MODEL)),
-        check_vma=False))
+        out_specs=P((DATA, MODEL))))
     out = fn(gd.src_local, gd.dst_local, gd.valid, jnp.asarray(deg_xj))
     return out[: g.num_nodes]

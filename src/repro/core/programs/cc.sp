@@ -1,0 +1,16 @@
+// Beyond-paper program: connected components by min-label propagation.
+// Shows the DSL is not hard-wired to the four published algorithms.
+function Compute_CC(Graph g, propNode<int> comp, propNode<bool> modified) {
+    g.attachNodeProperty(comp = 0, modified = True);
+    forall(v in g.nodes()) {
+        v.comp = v;
+    }
+    bool finished = False;
+    fixedPoint until (finished : !modified) {
+        forall(v in g.nodes()) {
+            forall(nbr in g.nodesTo(v).filter(modified == True)) {
+                <v.comp, v.modified> = <Min(v.comp, nbr.comp), True>;
+            }
+        }
+    }
+}

@@ -1,0 +1,22 @@
+// Paper Fig. 18: PageRank (pull over in-neighbors, L1 convergence test).
+function Compute_PR(Graph g, float beta, float delta, int maxIter, propNode<float> pageRank) {
+    float numNodes = g.num_nodes();
+    propNode<float> pageRank_nxt;
+    g.attachNodeProperty(pageRank = 1 / numNodes);
+    int iterCount = 0;
+    float diff = 0.0;
+    do {
+        diff = 0.0;
+        forall(v in g.nodes()) {
+            float sum = 0.0;
+            forall(nbr in g.nodesTo(v)) {
+                sum = sum + nbr.pageRank / g.count_outNbrs(nbr);
+            }
+            float newPageRank = (1 - delta) / numNodes + delta * sum;
+            diff += abs(newPageRank - v.pageRank);
+            v.pageRank_nxt = newPageRank;
+        }
+        pageRank = pageRank_nxt;
+        iterCount++;
+    } while ((diff > beta) && (iterCount < maxIter));
+}

@@ -1,0 +1,15 @@
+// Paper Fig. 3: SSSP, push variant (Bellman-Ford with a modified-frontier).
+function Compute_SSSP(Graph g, propNode<int> dist, propNode<bool> modified, node src) {
+    g.attachNodeProperty(dist = INF, modified = False);
+    src.modified = True;
+    src.dist = 0;
+    bool finished = False;
+    fixedPoint until (finished : !modified) {
+        forall(v in g.nodes().filter(modified == True)) {
+            forall(nbr in g.neighbors(v)) {
+                edge e = g.getEdge(v, nbr);
+                <nbr.dist, nbr.modified> = <Min(nbr.dist, v.dist + e.weight), True>;
+            }
+        }
+    }
+}

@@ -1,0 +1,17 @@
+// SSSP, pull variant: each vertex gathers over in-neighbors (nodesTo) that
+// changed last round. Same fixed point as the push form; the backends map it
+// to segment reductions instead of scatter combines.
+function Compute_SSSP(Graph g, propNode<int> dist, propNode<bool> modified, node src) {
+    g.attachNodeProperty(dist = INF, modified = False);
+    src.modified = True;
+    src.dist = 0;
+    bool finished = False;
+    fixedPoint until (finished : !modified) {
+        forall(v in g.nodes()) {
+            forall(nbr in g.nodesTo(v).filter(modified == True)) {
+                edge e = g.getEdge(nbr, v);
+                <v.dist, v.modified> = <Min(v.dist, nbr.dist + e.weight), True>;
+            }
+        }
+    }
+}

@@ -1,0 +1,13 @@
+// Paper Fig. 20: triangle counting via the node-iterator wedge pattern.
+function Compute_TC(Graph g) {
+    int triangle_count = 0;
+    forall(v in g.nodes()) {
+        forall(u in g.neighbors(v).filter(u < v)) {
+            forall(w in g.neighbors(v).filter(w > v)) {
+                if (g.is_an_edge(u, w)) {
+                    triangle_count += 1;
+                }
+            }
+        }
+    }
+}

@@ -16,7 +16,7 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
-from ..graph.csr import CSRGraph, INF_I32
+from ..graph.csr import CSRGraph, ENGINE, INF_I32
 
 INF = jnp.int32(INF_I32)
 
@@ -67,22 +67,89 @@ def _edge_key_dtype(n: int):
 
 def is_an_edge(g: CSRGraph, u: jax.Array, w: jax.Array) -> jax.Array:
     """Membership test via binary search over the sorted (src, dst) key —
-    the paper's `is_an_edge` with sorted-CSR binary search (§5.1 TC)."""
+    the paper's `is_an_edge` with sorted-CSR binary search (§5.1 TC). The
+    key array is cached on the graph (built once in `from_edges`)."""
     if g.num_edges == 0:
         return jnp.zeros(jnp.broadcast_shapes(u.shape, w.shape), jnp.bool_)
     dt = _edge_key_dtype(g.num_nodes)
-    key = g.edge_src.astype(dt) * g.num_nodes + g.indices.astype(dt)
+    key = g.edge_key
     q = u.astype(dt) * g.num_nodes + w.astype(dt)
     pos = jnp.searchsorted(key, q)
     pos = jnp.clip(pos, 0, key.shape[0] - 1)
     return key[pos] == q
 
 
+# --- frontier engine (direction-optimizing traversal) --------------------------
+#
+# The paper gets performance per backend by restructuring the same IR; the
+# TPU restructuring here is Beamer-style direction optimization with
+# shape-static state: the frontier is a dense bool[N] threaded through the
+# while_loop carry (the fixedPoint conv property IS the frontier), and each
+# step picks push (scatter from frontier sources) or pull (gather/segment
+# over in-edges) via an on-device occupancy test — both branches compute the
+# identical relaxation, so lax.cond is exact, not approximate.
+
+def frontier_size(frontier: jax.Array) -> jax.Array:
+    """On-device occupancy count of a dense bool frontier."""
+    return jnp.sum(frontier.astype(jnp.int32))
+
+
+def frontier_should_push(frontier: jax.Array, n: int,
+                         threshold_frac: float | None = None) -> jax.Array:
+    """True when the frontier is sparse enough that push (scatter from the
+    few active sources) beats a pull sweep. The knob is
+    `ENGINE.push_threshold_frac` (fraction of N)."""
+    frac = ENGINE.push_threshold_frac if threshold_frac is None else threshold_frac
+    return frontier_size(frontier) <= jnp.int32(max(int(n * frac), 1))
+
+
+def relax_minplus_hybrid(g: CSRGraph, dist: jax.Array,
+                         frontier: jax.Array | None = None,
+                         threshold_frac: float | None = None) -> jax.Array:
+    """One SSSP/min-plus relaxation restricted to `frontier` sources, with
+    push/pull direction chosen on-device.
+
+      push: scatter-min dist[u]+w over out-edges of frontier vertices
+      pull: per-vertex min over in-edges, sources masked to the frontier
+
+    Both compute dist'[v] = min(dist[v], min_{(u,v)∈E, frontier[u]} dist[u]+w)
+    exactly, so the switch never changes results. `frontier=None` is a dense
+    sweep (every vertex contributes).
+
+    NOTE: the local backend emits this same push/pull pair inline
+    (local_jax.emit_relax_hybrid) so the generated source stays inspectable;
+    keep the two in sync."""
+    n = g.num_nodes
+
+    def push(d):
+        cand = d[g.edge_src] + g.weights
+        if frontier is not None:
+            cand = jnp.where(frontier[g.edge_src], cand, INF)
+        return scatter_min(d, g.indices, cand)
+
+    def pull(d):
+        cand = d[g.rev_indices] + g.rev_weights
+        if frontier is not None:
+            cand = jnp.where(frontier[g.rev_indices], cand, INF)
+        return jnp.minimum(d, segment_min(cand, g.rev_edge_dst, n))
+
+    if frontier is None:
+        return pull(dist)
+    return jax.lax.cond(frontier_should_push(frontier, n, threshold_frac),
+                        push, pull, dist)
+
+
 # --- BFS (iterateInBFS construct) ----------------------------------------------
 
 def bfs_levels(g: CSRGraph, root, max_levels: int | None = None):
-    """Level-synchronous BFS. Dense frontier: level[v] = -1 until visited.
-    Returns (level[int32 N], num_levels)."""
+    """Level-synchronous BFS with direction-optimizing expansion. Dense
+    frontier: level[v] = -1 until visited; frontier = (level == cur).
+
+      push (small frontier): scatter-or over out-edges of frontier vertices
+      pull (large frontier): segment-or over in-edges from frontier sources
+
+    Both mark exactly the unseen out-neighborhood of the frontier, so the
+    switch is result-invariant. Returns (level[int32 N], num_levels)."""
     n = g.num_nodes
     level0 = jnp.full((n,), -1, jnp.int32).at[root].set(0)
 
@@ -92,9 +159,19 @@ def bfs_levels(g: CSRGraph, root, max_levels: int | None = None):
 
     def body(state):
         level, cur, _ = state
-        src_on = level[g.edge_src] == cur
-        unseen = level[g.indices] < 0
-        reach = segment_max((src_on & unseen).astype(jnp.int32), g.indices, n) > 0
+        frontier = level == cur
+
+        def push(fr):
+            hit = scatter_or(jnp.zeros((n,), jnp.bool_), g.indices,
+                             fr[g.edge_src])
+            return hit
+
+        def pull(fr):
+            return segment_max(fr[g.rev_indices].astype(jnp.int32),
+                               g.rev_edge_dst, n) > 0
+
+        reach = jax.lax.cond(frontier_should_push(frontier, n), push, pull,
+                             frontier)
         newly = reach & (level < 0)
         level = jnp.where(newly, cur + 1, level)
         return level, cur + 1, jnp.any(newly)
@@ -115,8 +192,7 @@ def wedge_count(g: CSRGraph, chunk: int = 512) -> jax.Array:
         return jnp.int32(0)
     max_deg = max(g.max_out_degree, 1)   # static (host-side) metadata
     dt = _edge_key_dtype(n)
-    # padded neighbor matrix rows built on the fly per chunk
-    key = g.edge_src.astype(dt) * n + g.indices.astype(dt)
+    key = g.edge_key                     # cached sorted (src·N + dst)
 
     def row_nbrs(vs):
         # [C, D] neighbor ids (n = padding)

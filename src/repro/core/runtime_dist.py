@@ -31,6 +31,28 @@ from . import runtime as rt
 AXIS = "data"
 
 
+def shard_map(f, *, mesh, in_specs, out_specs):
+    """Version-compat shard_map: `jax.shard_map(..., check_vma=False)` on
+    new jax, `jax.experimental.shard_map.shard_map(..., check_rep=False)`
+    on 0.4.x — same semantics (replication checking off; the generated
+    bodies use collectives explicitly)."""
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=False)
+    from jax.experimental.shard_map import shard_map as _sm
+    return _sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+               check_rep=False)
+
+
+def axis_size(name: str) -> int:
+    """Static mesh-axis size from inside a shard_map body. `psum(1, axis)`
+    constant-folds to a Python int on every jax line; `lax.axis_size` only
+    exists on newer ones."""
+    if hasattr(jax.lax, "axis_size"):
+        return jax.lax.axis_size(name)
+    return jax.lax.psum(1, name)
+
+
 # --------------------------------------------------------------------------
 # Graph preparation (host side)
 # --------------------------------------------------------------------------
@@ -49,6 +71,7 @@ def prepare_graph_1d(g: CSRGraph, num_devices: int, *, ell: bool = False) -> dic
         edge_src=g.rev_edge_dst, rev_indptr=g.indptr, rev_indices=g.indices,
         rev_weights=g.weights, rev_edge_dst=g.edge_src,
         out_degree=g.in_degree, in_degree=g.out_degree,
+        edge_key=g.rev_edge_dst * jnp.int32(g.num_nodes) + g.rev_indices,
         num_nodes=g.num_nodes, num_edges=g.num_edges,
         max_out_degree=g.max_in_degree, max_in_degree=g.max_out_degree)
     inn = block_partition_1d(rev, p)                    # (dst, src) pairs by dst block
@@ -78,9 +101,7 @@ def prepare_graph_1d(g: CSRGraph, num_devices: int, *, ell: bool = False) -> dic
         "in_degree_rep": jnp.asarray(deg_in),
         "n_true_rep": jnp.asarray(g.num_nodes, jnp.int32),
     }
-    key_dt = jnp.int32
-    gd["edge_key_rep"] = (g.edge_src.astype(key_dt) * g.num_nodes
-                          + g.indices.astype(key_dt))
+    gd["edge_key_rep"] = g.edge_key   # cached, built once in from_edges
     if ell:
         from ..graph.csr import to_ell
         e = to_ell(g)

@@ -1,10 +1,15 @@
-from .csr import CSRGraph, EllGraph, from_edges, to_dense, to_ell, pad_nodes, INF_I32
-from .generators import uniform_random, rmat, road, small_world, powerlaw_social, load_suite, SUITE
+from .csr import (CSRGraph, EllGraph, ENGINE, EngineConfig, SlicedEllGraph,
+                  from_edges, to_dense, to_ell, to_sliced_ell, pad_nodes,
+                  INF_I32)
+from .generators import (uniform_random, rmat, road, small_world,
+                         powerlaw_social, preferential_attachment, load_suite,
+                         SUITE)
 from . import algorithms_ref, io, partition
 
 __all__ = [
-    "CSRGraph", "EllGraph", "from_edges", "to_dense", "to_ell", "pad_nodes",
+    "CSRGraph", "EllGraph", "ENGINE", "EngineConfig", "SlicedEllGraph",
+    "from_edges", "to_dense", "to_ell", "to_sliced_ell", "pad_nodes",
     "INF_I32", "uniform_random", "rmat", "road", "small_world",
-    "powerlaw_social", "load_suite", "SUITE", "algorithms_ref", "io",
-    "partition",
+    "powerlaw_social", "preferential_attachment", "load_suite", "SUITE",
+    "algorithms_ref", "io", "partition",
 ]

@@ -20,6 +20,24 @@ import numpy as np
 INF_I32 = np.int32(2**30)  # "infinity" that survives + weight without overflow
 
 
+@dataclasses.dataclass
+class EngineConfig:
+    """Knobs of the frontier-aware, degree-bucketed execution engine.
+
+    Mutate `ENGINE` (module-level singleton) before compiling/preparing a
+    graph to retune; see README "Engine knobs".
+    """
+
+    num_buckets: int = 4          # degree buckets in the sliced-ELL view
+    min_width: int = 8            # width of the narrowest bucket (VPU lane multiple)
+    growth: int = 4               # geometric width growth between buckets
+    push_threshold_frac: float = 1.0 / 16.0  # frontier occupancy below which
+    # the engine relaxes push-style (scatter) instead of pull (gather/kernel)
+
+
+ENGINE = EngineConfig()
+
+
 @jax.tree_util.register_dataclass
 @dataclasses.dataclass(frozen=True)
 class CSRGraph:
@@ -43,6 +61,11 @@ class CSRGraph:
     # --- degrees ---
     out_degree: jax.Array  # int32[N]
     in_degree: jax.Array   # int32[N]
+    # --- membership index ---
+    # sorted (src*N + dst) key, built once so is_an_edge / wedge_count never
+    # rebuild it per call; meaningful only while N*N fits int32 (the
+    # consumers guard), but always present so the pytree shape is uniform.
+    edge_key: jax.Array    # int32[E]
     # --- static metadata ---
     num_nodes: int = dataclasses.field(metadata=dict(static=True))
     num_edges: int = dataclasses.field(metadata=dict(static=True))
@@ -103,6 +126,9 @@ def from_edges(
     rev_indptr, rev_indices, rev_w, rev_edge_dst = _build_csr(n, dst, src, w)
     out_deg = np.diff(indptr).astype(np.int32)
     in_deg = np.diff(rev_indptr).astype(np.int32)
+    # CSR order is lexsorted by (src, dst), so the key array is sorted by
+    # construction; int64 intermediate avoids silent wrap while building.
+    edge_key = (edge_src.astype(np.int64) * n + indices.astype(np.int64)).astype(np.int32)
     return CSRGraph(
         indptr=jnp.asarray(indptr),
         indices=jnp.asarray(indices),
@@ -114,6 +140,7 @@ def from_edges(
         rev_edge_dst=jnp.asarray(rev_edge_dst),
         out_degree=jnp.asarray(out_deg),
         in_degree=jnp.asarray(in_deg),
+        edge_key=jnp.asarray(edge_key),
         num_nodes=int(n),
         num_edges=int(e),
         max_out_degree=int(out_deg.max(initial=1)),
@@ -167,6 +194,103 @@ def to_ell(g: CSRGraph, *, reverse: bool = False, pad_to: int = 8) -> EllGraph:
     return EllGraph(cols=jnp.asarray(cols), wts=jnp.asarray(w), num_nodes=n, max_deg=d)
 
 
+# --- degree-bucketed sliced-ELL view (frontier-aware engine) ----------------
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class SlicedEllGraph:
+    """Degree-bucketed ELL: rows grouped by degree, each bucket padded only to
+    its own width, hub rows (degree > the widest bucket) kept as flat COO.
+
+    The single `[N, max_deg]` ELL view pads every row to the hub degree; on a
+    power-law graph that is O(N·max_deg) work and memory for O(E) useful
+    entries. Bucketing by degree (widths 8, 32, 128, 512 by default) brings
+    padded work back to near O(E) while every bucket stays rectangular —
+    still a TPU-tileable layout, just several small ones.
+
+    Per bucket b: cols[b] is int32[Rb, Db] (sentinel `num_nodes` for padding,
+    its x-slot holds 0), wts[b] is int32[Rb, Db] (INF padding), rows[b] is
+    int32[Rb] (original row id; sentinel `num_nodes` for row padding —
+    scatter-dropped). Hub edges: (hub_rows, hub_cols, hub_wts) int32[Eh].
+    """
+
+    cols: tuple      # tuple of int32[Rb, Db]
+    wts: tuple       # tuple of int32[Rb, Db]
+    rows: tuple      # tuple of int32[Rb]
+    hub_rows: jax.Array  # int32[Eh]
+    hub_cols: jax.Array  # int32[Eh]
+    hub_wts: jax.Array   # int32[Eh]
+    num_nodes: int = dataclasses.field(metadata=dict(static=True))
+    widths: tuple = dataclasses.field(default=(), metadata=dict(static=True))
+
+    def padded_cells(self) -> int:
+        """Total padded (cols) slots — the memory/work proxy benchmarks track."""
+        return sum(int(c.shape[0]) * int(c.shape[1]) for c in self.cols) \
+            + int(self.hub_cols.shape[0])
+
+
+def to_sliced_ell(
+    g: CSRGraph,
+    *,
+    reverse: bool = False,
+    num_buckets: Optional[int] = None,
+    min_width: Optional[int] = None,
+    growth: Optional[int] = None,
+    row_pad: int = 8,
+) -> SlicedEllGraph:
+    """Build the degree-bucketed view (host side, once per graph).
+
+    `reverse=True` buckets by in-degree with in-neighbor columns — the pull
+    orientation both backends relax/gather over. Degree-0 rows are dropped
+    entirely (they contribute the semiring identity).
+    """
+    cfg = ENGINE
+    num_buckets = cfg.num_buckets if num_buckets is None else num_buckets
+    min_width = cfg.min_width if min_width is None else min_width
+    growth = cfg.growth if growth is None else growth
+    indptr = np.asarray(g.rev_indptr if reverse else g.indptr)
+    indices = np.asarray(g.rev_indices if reverse else g.indices)
+    wts = np.asarray(g.rev_weights if reverse else g.weights)
+    n = g.num_nodes
+    deg = np.diff(indptr)
+    widths = [min_width * growth**i for i in range(max(num_buckets, 1))]
+    hub_width = widths[-1]
+
+    b_cols, b_wts, b_rows = [], [], []
+    prev_w = 0
+    for w_b in widths:
+        sel = np.nonzero((deg > prev_w) & (deg <= w_b))[0]
+        prev_w = w_b
+        if len(sel) == 0:
+            continue
+        rb = _round_up(len(sel), row_pad)
+        cols = np.full((rb, w_b), n, np.int32)
+        vals = np.full((rb, w_b), int(INF_I32), np.int32)
+        rows = np.full((rb,), n, np.int32)
+        rows[: len(sel)] = sel
+        for k, r in enumerate(sel):
+            s, e = indptr[r], indptr[r + 1]
+            cols[k, : e - s] = indices[s:e]
+            vals[k, : e - s] = wts[s:e]
+        b_cols.append(jnp.asarray(cols))
+        b_wts.append(jnp.asarray(vals))
+        b_rows.append(jnp.asarray(rows))
+
+    hub_sel = np.nonzero(deg > hub_width)[0]
+    hr, hc, hw = [], [], []
+    for r in hub_sel:
+        s, e = indptr[r], indptr[r + 1]
+        hr.append(np.full(e - s, r, np.int32))
+        hc.append(indices[s:e].astype(np.int32))
+        hw.append(wts[s:e].astype(np.int32))
+    cat = (lambda xs: np.concatenate(xs) if xs else np.zeros(0, np.int32))
+    return SlicedEllGraph(
+        cols=tuple(b_cols), wts=tuple(b_wts), rows=tuple(b_rows),
+        hub_rows=jnp.asarray(cat(hr)), hub_cols=jnp.asarray(cat(hc)),
+        hub_wts=jnp.asarray(cat(hw)),
+        num_nodes=n, widths=tuple(int(c.shape[1]) for c in b_cols))
+
+
 def pad_nodes(g: CSRGraph, multiple: int) -> CSRGraph:
     """Pad to a node-count multiple (the paper pads the last MPI shard; we pad
     so every device shard has identical extent)."""
@@ -184,5 +308,8 @@ def pad_nodes(g: CSRGraph, multiple: int) -> CSRGraph:
         rev_indptr=pad_ptr(g.rev_indptr),
         out_degree=jnp.concatenate([g.out_degree, jnp.zeros(extra, jnp.int32)]),
         in_degree=jnp.concatenate([g.in_degree, jnp.zeros(extra, jnp.int32)]),
+        # the key encodes num_nodes, so it must be rebuilt for the new N
+        # (still sorted: CSR order is (src, dst)-lexicographic)
+        edge_key=g.edge_src * jnp.int32(n_pad) + g.indices,
         num_nodes=n_pad,
     )

@@ -91,6 +91,30 @@ def powerlaw_social(n: int, avg_degree: int = 12, seed: int = 0) -> CSRGraph:
     return from_edges(n, src, dst, _weights(rng, e), drop_self_loops=True)
 
 
+def preferential_attachment(n: int, m: int = 8, seed: int = 0) -> CSRGraph:
+    """Barabási-Albert preferential attachment: every new vertex attaches m
+    edges to existing vertices chosen ∝ degree. True power-law degrees with
+    a heavy hub tail (max degree ~ m·√n) — the adversarial input for the
+    degree-bucketed engine, without the memory blow-up of a Zipf hub."""
+    rng = np.random.default_rng(seed)
+    src_l, dst_l = [], []
+    repeated = [0]               # endpoint multiset: sampling it is ∝ degree
+    for v in range(1, n):
+        k = min(m, v)            # early vertices: fewer distinct targets exist
+        chosen = set()
+        while len(chosen) < k:
+            chosen.add(repeated[rng.integers(len(repeated))])
+        for u in chosen:
+            src_l.append(v)
+            dst_l.append(u)
+            repeated.append(v)
+            repeated.append(u)
+    src = np.asarray(src_l, np.int64)
+    dst = np.asarray(dst_l, np.int64)
+    return from_edges(n, src, dst, _weights(rng, len(src)), undirected=True,
+                      drop_self_loops=True)
+
+
 SUITE = {
     # acronym -> (factory, kwargs)   — scaled-down Table 2
     "TW": (powerlaw_social, dict(n=4096, avg_degree=12, seed=1)),

@@ -44,11 +44,12 @@ def _plustimes_body(cols_ref, vals_ref, x_ref, y_ref):
 def ell_spmv(cols: jax.Array, vals: jax.Array, x: jax.Array, *,
              semiring: str = "minplus", block_rows: int = 256,
              interpret: bool = True) -> jax.Array:
-    """cols/vals: [N, D] (N divisible by block_rows); x: [N + 1] with the
-    sentinel slot last. Returns y: [N]."""
+    """cols/vals: [R, D] (R divisible by block_rows); x: the gather source,
+    VMEM-resident, with the sentinel slot last (so any length ≥ max(cols)+1 —
+    sliced-ELL buckets have R ≪ len(x)). Returns y: [R]."""
     n, d = cols.shape
     assert n % block_rows == 0, (n, block_rows)
-    assert x.shape[0] == n + 1
+    m = x.shape[0]
     body = _minplus_body if semiring == "minplus" else _plustimes_body
     grid = (n // block_rows,)
     return pl.pallas_call(
@@ -57,9 +58,18 @@ def ell_spmv(cols: jax.Array, vals: jax.Array, x: jax.Array, *,
         in_specs=[
             pl.BlockSpec((block_rows, d), lambda i: (i, 0)),   # cols tile
             pl.BlockSpec((block_rows, d), lambda i: (i, 0)),   # vals tile
-            pl.BlockSpec((n + 1,), lambda i: (0,)),            # x resident
+            pl.BlockSpec((m,), lambda i: (0,)),                # x resident
         ],
         out_specs=pl.BlockSpec((block_rows,), lambda i: (i,)),
         out_shape=jax.ShapeDtypeStruct((n,), x.dtype),
         interpret=interpret,
     )(cols, vals, x)
+
+
+def _best_block(rows: int, cap: int = 256) -> int:
+    """Largest power-of-two row block ≤ cap dividing `rows` (rows % 8 == 0).
+    Sliced-ELL buckets (ops.py) pick their grid with this."""
+    b = 8
+    while b * 2 <= cap and rows % (b * 2) == 0:
+        b *= 2
+    return b

@@ -1,8 +1,21 @@
-"""Jitted wrappers: graph-level relax/gather ops on the ELL kernel.
+"""Jitted wrappers: graph-level relax/gather ops on the ELL kernels.
 
 These are what the DSL's Pallas backend emits calls to. They own the
-padding/layout glue (sentinel slot, row-block padding) so the kernel itself
-stays rectangular.
+padding/layout glue (sentinel slot, row-block padding, degree buckets) so
+the kernels themselves stay rectangular.
+
+Two layouts coexist:
+
+  * dense ELL (`prepare_ell` → cols/wts arrays): the original single
+    `[N, max_deg]` view — kept for the kernel unit tests and as the
+    benchmark baseline;
+  * sliced ELL (`prepare_sliced_ell` → `SlicedEllGraph`): degree-bucketed
+    tiles + a COO hub fallback — the frontier-aware engine's layout.
+    `relax_minplus` / `gather_plustimes` dispatch on the first argument.
+
+On non-TPU hosts the sliced ops run an equivalent pure-jnp path instead of
+interpret-mode Pallas: identical math, without the interpreter overhead
+(the kernels proper are still exercised by tests/test_kernels.py).
 """
 from __future__ import annotations
 
@@ -12,10 +25,14 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from ...graph.csr import CSRGraph, EllGraph, INF_I32, to_ell
-from .kernel import ell_spmv
+from ...graph.csr import (CSRGraph, INF_I32, SlicedEllGraph, to_ell,
+                          to_sliced_ell)
+from .kernel import _best_block, ell_spmv
 
 _INTERPRET = jax.default_backend() != "tpu"
+_USE_KERNEL = not _INTERPRET   # pure-jnp fallback off-TPU (same semantics)
+
+INF = jnp.int32(INF_I32)
 
 
 def _pad_rows(a, block):
@@ -28,7 +45,7 @@ def _pad_rows(a, block):
 
 
 def prepare_ell(g: CSRGraph, *, reverse: bool = False, block_rows: int = 256):
-    """Host-side: build the padded ELL arrays once per graph.
+    """Host-side: build the padded dense-ELL arrays once per graph.
 
     Returns (cols, wts, n_rows_padded). cols pad slots point at the sentinel
     row (index n); wts pad slots are INF (masked out by the semiring)."""
@@ -46,12 +63,20 @@ def prepare_ell(g: CSRGraph, *, reverse: bool = False, block_rows: int = 256):
     return jnp.asarray(cols), jnp.asarray(wts), block
 
 
+def prepare_sliced_ell(g: CSRGraph, *, reverse: bool = True,
+                       **knobs) -> SlicedEllGraph:
+    """Host-side: degree-bucketed view for the frontier-aware engine.
+    Default orientation is reverse (in-edges) — the pull layout."""
+    return to_sliced_ell(g, reverse=reverse, **knobs)
+
+
+# --------------------------------------------------------------------------
+# dense-ELL ops (baseline layout)
+# --------------------------------------------------------------------------
+
 @partial(jax.jit, static_argnames=("block_rows",))
-def relax_minplus(cols, wts, dist, *, block_rows: int = 256):
-    """One SSSP relax sweep: dist'[v] = min(dist[v], min_in-nbr dist[u]+w).
-    `cols/wts` must be the REVERSE (in-edge) ELL view; sentinel slot added
-    here (x[n] = INF so pad contributions never win... pad wts are INF and
-    INF+INF would overflow, so the sentinel x is 0 and pad wts carry INF)."""
+def _relax_dense(cols, wts, dist, *, block_rows: int = 256):
+    """One dense SSSP relax sweep over the single-width ELL view."""
     n = dist.shape[0]
     n_pad = cols.shape[0]
     block_rows = min(block_rows, n_pad)   # prepare_ell guarantees divisibility
@@ -64,9 +89,7 @@ def relax_minplus(cols, wts, dist, *, block_rows: int = 256):
 
 
 @partial(jax.jit, static_argnames=("block_rows",))
-def gather_plustimes(cols, contrib, n_out: int = None, *, block_rows: int = 256):
-    """PR gather: y[v] = sum_{u in-nbr} contrib[u]; `contrib` already divided
-    by out-degree. cols = reverse ELL; pad slots hit the 0 sentinel."""
+def _gather_dense(cols, contrib, *, block_rows: int = 256):
     n = contrib.shape[0]
     n_pad = cols.shape[0]
     block_rows = min(block_rows, n_pad)
@@ -74,4 +97,97 @@ def gather_plustimes(cols, contrib, n_out: int = None, *, block_rows: int = 256)
     x = jnp.zeros((n_pad + 1,), contrib.dtype).at[:n].set(contrib)
     y = ell_spmv(cols, ones, x, semiring="plustimes",
                  block_rows=block_rows, interpret=_INTERPRET)
+    return y
+
+
+# --------------------------------------------------------------------------
+# sliced-ELL ops (frontier-aware engine)
+# --------------------------------------------------------------------------
+
+def _bucket_minplus(cols, wts, x):
+    if _USE_KERNEL:
+        return ell_spmv(cols, wts, x, semiring="minplus",
+                        block_rows=_best_block(cols.shape[0]),
+                        interpret=_INTERPRET)
+    return jnp.min(jnp.take(x, cols, axis=0) + wts, axis=1)
+
+
+def _bucket_plustimes(cols, x):
+    if _USE_KERNEL:
+        ones = jnp.ones(cols.shape, x.dtype)   # pads hit the 0 sentinel
+        return ell_spmv(cols, ones, x, semiring="plustimes",
+                        block_rows=_best_block(cols.shape[0]),
+                        interpret=_INTERPRET)
+    return jnp.sum(jnp.take(x, cols, axis=0), axis=1)
+
+
+def _relax_sliced_pull(ell: SlicedEllGraph, dist, frontier=None):
+    """Masked-pull sweep: per-bucket min-plus kernels + COO hub fallback.
+    Frontier masking happens on the gather source (x), so the kernels stay
+    unmasked and rectangular."""
+    n = ell.num_nodes
+    x = dist if frontier is None else jnp.where(frontier, dist, INF)
+    # sentinel slot (index n) holds 0 so INF pad weights never overflow
+    x_ext = jnp.zeros((n + 1,), dist.dtype).at[:n].set(x)
+    y = jnp.full((n,), INF, dist.dtype)
+    for cols, wts, rows in zip(ell.cols, ell.wts, ell.rows):
+        y = y.at[rows].min(_bucket_minplus(cols, wts, x_ext), mode="drop")
+    if ell.hub_rows.shape[0]:
+        y = y.at[ell.hub_rows].min(x_ext[ell.hub_cols] + ell.hub_wts,
+                                   mode="drop")
+    return jnp.minimum(dist, y)
+
+
+def _relax_push(g: CSRGraph, dist, frontier):
+    """Scatter-push from the (sparse) frontier over out-edges."""
+    cand = dist[g.edge_src] + g.weights
+    cand = jnp.where(frontier[g.edge_src], cand, INF)
+    return dist.at[g.indices].min(cand)
+
+
+def relax_minplus(cols_or_ell, wts_or_dist, dist=None, *, frontier=None,
+                  csr: CSRGraph | None = None, block_rows: int = 256,
+                  threshold_frac: float | None = None):
+    """One SSSP relax step.
+
+    Dense form (baseline): `relax_minplus(cols, wts, dist)` — full pull
+    sweep over the `[N, max_deg]` reverse-ELL view.
+
+    Sliced form (engine): `relax_minplus(ell, dist, frontier=fr, csr=g)` —
+    frontier-masked, direction-optimized: when the frontier occupancy is
+    under `ENGINE.push_threshold_frac · N` the relax runs push-style over
+    the CSR out-edges (scatter-min), otherwise as per-bucket pull kernels.
+    Both directions compute the identical relaxation, so the on-device
+    `lax.cond` switch never changes results."""
+    if not isinstance(cols_or_ell, SlicedEllGraph):
+        return _relax_dense(cols_or_ell, wts_or_dist, dist,
+                            block_rows=block_rows)
+    ell, dist = cols_or_ell, wts_or_dist
+    if frontier is None or csr is None:
+        return _relax_sliced_pull(ell, dist, frontier)
+    from ...core.runtime import frontier_should_push  # one threshold heuristic
+    return jax.lax.cond(
+        frontier_should_push(frontier, ell.num_nodes, threshold_frac),
+        lambda d: _relax_push(csr, d, frontier),
+        lambda d: _relax_sliced_pull(ell, d, frontier),
+        dist)
+
+
+def gather_plustimes(cols_or_ell, contrib, n_out: int = None, *,
+                     block_rows: int = 256):
+    """PR gather: y[v] = sum_{u in-nbr} contrib[u]; `contrib` already divided
+    by out-degree.
+
+    Dense form: `gather_plustimes(cols, contrib)` (returns padded rows).
+    Sliced form: `gather_plustimes(ell, contrib)` (returns exactly [N])."""
+    if not isinstance(cols_or_ell, SlicedEllGraph):
+        return _gather_dense(cols_or_ell, contrib, block_rows=block_rows)
+    ell = cols_or_ell
+    n = ell.num_nodes
+    x_ext = jnp.zeros((n + 1,), contrib.dtype).at[:n].set(contrib)
+    y = jnp.zeros((n,), contrib.dtype)
+    for cols, _, rows in zip(ell.cols, ell.wts, ell.rows):
+        y = y.at[rows].add(_bucket_plustimes(cols, x_ext), mode="drop")
+    if ell.hub_rows.shape[0]:
+        y = y.at[ell.hub_rows].add(x_ext[ell.hub_cols], mode="drop")
     return y

@@ -1,6 +1,9 @@
 """Property-based tests (hypothesis) on system invariants."""
 import numpy as np
 import pytest
+
+pytest.importorskip("hypothesis", reason="hypothesis not installed; skipping "
+                    "property-based tests (the rest of the suite still runs)")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import compile_bundled

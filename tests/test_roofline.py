@@ -53,7 +53,8 @@ def test_xla_cost_analysis_counts_bodies_once():
     def scanned(x, ws):
         return jax.lax.scan(lambda c, w: (c @ w, None), x, ws)[0]
     comp = _compile(scanned, x, ws)
-    assert comp.cost_analysis()["flops"] < 2 * 128 ** 3 * 2   # ~1 body
+    from repro.launch.hlo_cost import xla_cost_dict
+    assert xla_cost_dict(comp)["flops"] < 2 * 128 ** 3 * 2   # ~1 body
 
 
 def test_data_dependent_while_flagged():
