@@ -7,6 +7,7 @@
 from __future__ import annotations
 
 import os
+import weakref
 from dataclasses import dataclass
 from typing import Callable, Optional
 
@@ -59,7 +60,7 @@ def compile_program(source: str, backend: str = "local", fn_name: Optional[str] 
 
     if backend == "local":
         from .codegen.local_jax import generate_local
-        body = generate_local(irfn)
+        body = generate_local(irfn, **backend_opts)
         extra_env = None
     elif backend == "distributed":
         from .codegen.distributed import generate_distributed
@@ -77,15 +78,26 @@ def compile_program(source: str, backend: str = "local", fn_name: Optional[str] 
     if backend == "pallas":
         from ..kernels.ell_spmv.ops import prepare_sliced_ell
         jitted = jax.jit(raw) if jit else raw
+        # Per-graph ELL cache. Entries hold a WEAK reference to the graph:
+        # `id(g)` alone is unsafe (ids are reused after GC, so a dead graph
+        # could alias a new one's sliced view) and keeping `g` strongly would
+        # leak every graph ever run. The weakref callback evicts the entry
+        # the moment the graph is collected, so the dict cannot grow
+        # unboundedly, and the `ref() is g` check guards against id reuse in
+        # the window before the callback fires.
         _ell_cache = {}
 
         def fn(g, **kw):
             key = id(g)
-            if key not in _ell_cache:
+            entry = _ell_cache.get(key)
+            if entry is None or entry[0]() is not g:
                 # degree-bucketed reverse (in-edge) view, built once per graph
-                _ell_cache[key] = (g, prepare_sliced_ell(g, reverse=True))
-            _, ell = _ell_cache[key]
+                ref = weakref.ref(g, lambda _r, _k=key: _ell_cache.pop(_k, None))
+                _ell_cache[key] = entry = (ref, prepare_sliced_ell(g, reverse=True))
+            _, ell = entry
             return jitted(g, ell, **kw)
+
+        fn._ell_cache = _ell_cache   # introspection hook (tests)
     else:
         fn = jax.jit(raw) if jit and backend == "local" else raw
     prog = CompiledProgram(name=irfn.name, backend=backend, source=src,

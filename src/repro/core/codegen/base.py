@@ -115,6 +115,22 @@ class BFSCtx:
     kind: str = "bfs"
 
 
+@dataclass
+class BatchInfo:
+    """Active batched source-set region (`forall(src in sourceSet)` with
+    `ENGINE.batch_sources > 1`): per-source vertex state is [B, N] — row b is
+    source b's view — and the fields below are the generated-code names the
+    emitters use to index into the batch."""
+
+    size: str                    # py expr: static chunk width (python int)
+    lane: str                    # py expr: int32[B] = arange(B)
+    srcs: str                    # py expr: int32[B] source ids of this chunk
+    srcs2d: str                  # py expr: [B, 1] view (broadcasts over [.., N])
+    valid: str                   # py expr: bool[B] padding mask (last chunk)
+    it: str                      # the set-iterator name bound to srcs2d
+    arrays: set = field(default_factory=set)  # names shaped [B, N] (vs shared [N])
+
+
 def ctx_chain(ctx):
     while ctx is not None:
         yield ctx
@@ -173,6 +189,8 @@ class ExprEmitter:
         self.g = graph_var
         # fixedPoint write-redirect: prop -> replacement var (read side stays)
         self.prop_read_alias: dict = {}
+        # active batched source-set region (set by the codegen), or None
+        self.batch: Optional[BatchInfo] = None
 
     # -- helpers --------------------------------------------------------------
     def index_of(self, name: str, ctx) -> str:
@@ -216,6 +234,11 @@ class ExprEmitter:
             idx = self.index_of(e.target, ctx)
             if idx == "_vids":
                 return arr            # vertex ctx: aligned whole array
+            b = self.batch
+            if b is not None and e.prop in b.arrays:
+                if idx == b.srcs2d:   # src.prop on a batched prop: lane-diagonal
+                    return f"{arr}[{b.lane}, {b.srcs}][:, None]"
+                return f"{arr}[:, {idx}]"   # batched gather: [B, E] / [B, ...]
             return f"{arr}[{idx}]"
         if isinstance(e, I.IEdgeWeight):
             for c in ctx_chain(ctx):

@@ -67,6 +67,9 @@ class DistExprEmitter(ExprEmitter):
 class DistCodegen(LocalCodegen):
     backend_name = "distributed"
     VLEN = "B"
+    # properties are device-sharded [B]-blocks here; the [B, N] source
+    # batching of the local/pallas backends does not apply
+    supports_source_batching = False
 
     def __init__(self, irfn: I.IRFunction):
         super().__init__(irfn)

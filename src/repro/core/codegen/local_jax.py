@@ -12,10 +12,11 @@ from __future__ import annotations
 from typing import List, Optional
 
 from .. import ir as I
+from ...graph.csr import ENGINE
 from ..ir import written_vars
-from .base import (BFSCtx, CodegenError, EdgeCtx, Emitter, ExprEmitter,
-                   HostCtx, VertexCtx, ctx_chain, prop_plus_weight,
-                   pure_vertex_predicate)
+from .base import (BatchInfo, BFSCtx, CodegenError, EdgeCtx, Emitter,
+                   ExprEmitter, HostCtx, VertexCtx, ctx_chain,
+                   prop_plus_weight, pure_vertex_predicate)
 
 _JNP_DTYPE = {"int32": "jnp.int32", "bool": "jnp.bool_",
               "float32": "jnp.float32", "float64": "jnp.float32"}
@@ -27,18 +28,57 @@ _RED = {"+": "+", "-": "-", "*": "*", "/": "/", "&&": "&", "||": "|"}
 class LocalCodegen:
     backend_name = "local"
     VLEN = "N"
+    # batched `forall(src in sourceSet)` lowering (ENGINE.batch_sources);
+    # the distributed backend opts out (its properties are device-sharded)
+    supports_source_batching = True
 
-    def __init__(self, irfn: I.IRFunction):
+    def __init__(self, irfn: I.IRFunction, batch_sources: Optional[int] = None):
         self.f = irfn
         self.em = Emitter()
         self.ex = ExprEmitter(irfn, graph_var=irfn.graph_param)
         self.declared: List[str] = []      # ordered mutable host-scope vars
         self.dtypes = {}
         self.write_alias = {}              # fixedPoint redirects
+        self.batch = None                  # active BatchInfo (batched set loop)
+        self.batch_sources = batch_sources # None -> read ENGINE at emit time
 
     # ------------------------------------------------------------------ utils
     def dtype_of(self, name: str) -> Optional[str]:
         return self.dtypes.get(name)
+
+    def bg(self, arr: str, idx: str) -> str:
+        """Gather `arr[idx]`, batch-aware: arrays registered as [B, N] in the
+        active batched region gather along the vertex axis (`arr[:, idx]`)."""
+        if self.batch is not None and arr in self.batch.arrays:
+            return f"{arr}[:, {idx}]"
+        return f"{arr}[{idx}]"
+
+    def _vmask(self, expr: str) -> str:
+        """Materialize a vertex mask; inside a batched region every vertex
+        mask is broadcast to [B, N] so downstream gathers/reductions see one
+        uniform shape regardless of what the predicate read."""
+        m = self.em.uid("vm")
+        if self.batch is not None:
+            self.em.w(f"{m} = jnp.broadcast_to(jnp.asarray({expr}), "
+                      f"({self.batch.size}, {self.VLEN}))")
+            self.batch.arrays.add(m)
+        else:
+            self.em.w(f"{m} = {expr}")
+        return m
+
+    def _snapshot(self):
+        return (len(self.em.lines), self.em._uid, list(self.declared),
+                dict(self.dtypes), dict(self.write_alias))
+
+    def _restore(self, state):
+        nlines, uid, decl, dts, wa = state
+        del self.em.lines[nlines:]
+        self.em._uid = uid
+        self.declared[:] = decl
+        self.dtypes = dts
+        self.write_alias = wa
+        self.batch = None
+        self.ex.batch = None
 
     def jdt(self, dtype: str) -> str:
         return _JNP_DTYPE[dtype]
@@ -97,6 +137,17 @@ class LocalCodegen:
             raise CodegenError("edge properties not yet supported in codegen")
         for prop, dtype, init in s.props:
             self.declare(prop, dtype)
+            if self.batch is not None:
+                # per-source property inside a batched set loop → [B, N]
+                self.batch.arrays.add(prop)
+                b = self.batch.size
+                if init is None:
+                    self.em.w(f"{prop} = rt.init_prop_batch({b}, N, {self.jdt(dtype)})")
+                elif isinstance(init, I.IConst) and init.kind == "inf":
+                    self.em.w(f"{prop} = rt.init_prop_batch({b}, N, {self.jdt(dtype)}, rt.inf_for({self.jdt(dtype)}))")
+                else:
+                    self.em.w(f"{prop} = rt.init_prop_batch({b}, N, {self.jdt(dtype)}, {self.ex.expr(init, ctx)})")
+                continue
             if init is None:
                 self.em.w(f"{prop} = rt.init_prop(N, {self.jdt(dtype)})")
             elif isinstance(init, I.IConst) and init.kind == "inf":
@@ -107,24 +158,46 @@ class LocalCodegen:
     def s_IDeclScalar(self, s: I.IDeclScalar, ctx):
         em = self.em
         if s.vertex_local:
+            shape = (f"({self.batch.size}, {self.VLEN})" if self.batch is not None
+                     else f"({self.VLEN},)")
             if s.init is None or isinstance(s.init, I.IConst):
                 init = "0" if s.init is None else self.ex.expr(s.init, ctx)
-                em.w(f"{s.name} = jnp.full(({self.VLEN},), {init}, {self.jdt(s.dtype)})")
+                em.w(f"{s.name} = jnp.full({shape}, {init}, {self.jdt(s.dtype)})")
             else:
-                em.w(f"{s.name} = ({self.ex.expr(s.init, ctx)}) * jnp.ones(({self.VLEN},), {self.jdt(s.dtype)})")
+                em.w(f"{s.name} = ({self.ex.expr(s.init, ctx)}) * jnp.ones({shape}, {self.jdt(s.dtype)})")
+            if self.batch is not None:
+                self.batch.arrays.add(s.name)
             self.dtypes[s.name] = s.dtype
             return
+        if self.batch is not None:
+            raise CodegenError("host-scalar declaration inside a batched "
+                               "source loop (per-source scalars unsupported)")
         init = self.ex.expr(s.init, ctx) if s.init is not None else "0"
         em.w(f"{s.name} = jnp.asarray({init}, {self.jdt(s.dtype)})")
         self.declare(s.name, s.dtype)
 
     def s_ICopyProp(self, s: I.ICopyProp, ctx):
+        if self.batch is not None:
+            ba = self.batch.arrays
+            if (s.dst in ba) != (s.src in ba):
+                raise CodegenError("copy between batched and shared property")
         self.em.w(f"{self.wtarget(s.dst)} = {s.src}")
 
     def s_IWriteProp(self, s: I.IWriteProp, ctx):
         node = self.ex.expr(s.node, ctx)
         val = self.ex.expr(s.expr, ctx)
         p = self.wtarget(s.prop)
+        if self.batch is not None:
+            b = self.batch
+            if s.prop not in b.arrays:
+                raise CodegenError("single-node write to a shared property "
+                                   "inside a batched source loop")
+            if node != b.srcs2d:
+                raise CodegenError("batched single-node write must target the "
+                                   "set iterator")
+            # lane-diagonal write: row b updates its own source vertex
+            self.em.w(f"{p} = {p}.at[{b.lane}, {b.srcs}].set({val})")
+            return
         self.em.w(f"{p} = {p}.at[{node}].set({val})")
 
     def s_IAssign(self, s: I.IAssign, ctx):
@@ -141,6 +214,9 @@ class LocalCodegen:
                 else:
                     em.w(f"{s.name} = {e}")
             else:
+                if self.batch is not None:
+                    raise CodegenError("host-scalar assignment inside a "
+                                       "batched source loop")
                 em.w(f"{s.name} = {cast(e)}")
             return
         op = _RED[s.reduce_op]
@@ -148,13 +224,32 @@ class LocalCodegen:
             if ectx is not None:
                 # per-vertex accumulation over the neighborhood → segment op
                 masked = f"jnp.where({ectx.mask}, {e}, 0)" if ectx.mask else e
-                em.w(f"{s.name} = {s.name} {op} rt.segment_sum({masked}, {ectx.seg}, {self.VLEN}, sorted_ids={ectx.seg_sorted})")
+                if self.batch is not None:
+                    b = self.batch
+                    em.w(f"{s.name} = {s.name} {op} rt.segment_sum_batch("
+                         f"jnp.broadcast_to(jnp.asarray({masked}), ({b.size},) + {ectx.seg}.shape), "
+                         f"{ectx.seg}, {self.VLEN}, sorted_ids={ectx.seg_sorted})")
+                else:
+                    em.w(f"{s.name} = {s.name} {op} rt.segment_sum({masked}, {ectx.seg}, {self.VLEN}, sorted_ids={ectx.seg_sorted})")
             elif vctx is not None and vctx.mask:
                 em.w(f"{s.name} = jnp.where({vctx.mask}, {s.name} {op} ({e}), {s.name})")
             else:
                 em.w(f"{s.name} = {s.name} {op} ({e})")
             return
         # host scalar reduction (paper Table 1) from a parallel region
+        if self.batch is not None:
+            if s.reduce_op != "+":
+                raise CodegenError(f"host-scalar {s.reduce_op} reduction "
+                                   "inside a batched source loop")
+            valid = f"{self.batch.valid}[:, None]"
+            if ectx is not None or vctx is not None:
+                mask = (ectx or vctx).mask
+                m = f"({mask}) & {valid}" if mask else valid
+                em.w(f"{s.name} = {cast(f'{s.name} + jnp.sum(jnp.where({m}, {e}, 0))')}")
+            else:
+                raise CodegenError("host-scalar update outside any loop in a "
+                                   "batched source loop")
+            return
         if ectx is not None:
             masked = f"jnp.where({ectx.mask}, {e}, 0)" if ectx.mask else e
             em.w(f"{s.name} = {cast(f'{s.name} {op} jnp.sum({masked})')}")
@@ -178,11 +273,10 @@ class LocalCodegen:
         return None
 
     def s_IVertexLoop(self, s: I.IVertexLoop, ctx):
-        em = self.em
         mask = None
         if s.filter is not None:
-            mask = em.uid("vm")
-            em.w(f"{mask} = {self.ex.expr(s.filter, VertexCtx(it=s.it, mask=None, parent=ctx))}")
+            mask = self._vmask(
+                self.ex.expr(s.filter, VertexCtx(it=s.it, mask=None, parent=ctx)))
         vctx = VertexCtx(it=s.it, mask=mask, parent=ctx)
         self.body(s.body, vctx)
 
@@ -210,15 +304,15 @@ class LocalCodegen:
         terms = []
         pure = True
         if vctx.mask:
-            terms.append(f"{vctx.mask}[{ectx.vid}]")
+            terms.append(self.bg(vctx.mask, ectx.vid))
             ectx.src_vmask = vctx.mask
         if s.filter is not None:
             if pure_vertex_predicate(s.filter, s.it):
                 # neighbor-side filter that only reads nbr-props: hoist it to
                 # one [N] vertex mask (the frontier the engine switches on)
-                nm = em.uid("nm")
-                em.w(f"{nm} = {self.ex.expr(s.filter, VertexCtx(it=s.it, mask=None, parent=ctx))}")
-                terms.append(f"{nm}[{ectx.nid}]")
+                nm = self._vmask(
+                    self.ex.expr(s.filter, VertexCtx(it=s.it, mask=None, parent=ctx)))
+                terms.append(self.bg(nm, ectx.nid))
                 ectx.it_vmask = nm
             else:
                 terms.append(self.ex.expr(s.filter, ectx))
@@ -240,10 +334,10 @@ class LocalCodegen:
                        vid=f"{g}.edge_src", nid=f"{g}.indices",
                        w=f"{g}.weights", seg=f"{g}.edge_src",
                        seg_sorted=True, mask=None, parent=ctx)
-        terms = [f"({bctx.level}[{ectx.vid}] == {bctx.cur})",
-                 f"({bctx.level}[{ectx.nid}] == ({bctx.cur} + 1))"]
+        terms = [f"({self.bg(bctx.level, ectx.vid)} == {bctx.cur})",
+                 f"({self.bg(bctx.level, ectx.nid)} == ({bctx.cur} + 1))"]
         if bctx.mask:
-            terms.append(f"{bctx.mask}[{ectx.vid}]")
+            terms.append(self.bg(bctx.mask, ectx.vid))
         if s.filter is not None:
             terms.append(self.ex.expr(s.filter, ectx))
         mask = em.uid("em")
@@ -258,6 +352,8 @@ class LocalCodegen:
         vctx = self._vertex_ctx(ctx)
         p = self.wtarget(s.prop)
         e = self.ex.expr(s.expr, ctx)
+        if self.batch is not None:
+            return self._batched_assign_prop(s, ectx, vctx, p, e)
         if ectx is not None:
             if s.reduce_op is None:
                 raise CodegenError(
@@ -287,6 +383,62 @@ class LocalCodegen:
                 em.w(f"{p} = jnp.where({vctx.mask}, {p} {op} ({e}), {p})")
             else:
                 em.w(f"{p} = {p} {op} ({e})")
+
+    def _batched_assign_prop(self, s: I.IAssignProp, ectx, vctx, p: str, e: str):
+        """Property write inside a batched source-set region.
+
+        Batched ([B, N]) targets take the sequential lowering with the batch
+        axis along for the ride (masks are [B, *], segment ops use the
+        `_batch` variants). SHARED ([N]) targets collapse the lane axis with
+        a `+` reduction masked to the chunk's valid lanes — the per-source
+        contributions of the parallel `forall(src in sourceSet)`."""
+        em = self.em
+        b = self.batch
+        batched_target = s.prop in b.arrays
+        if ectx is not None:
+            if s.reduce_op is None:
+                raise CodegenError(
+                    f"unsynchronized per-edge write to {s.prop}; use a "
+                    "reduction or the Min/Max construct")
+            if s.reduce_op != "+":
+                raise CodegenError(f"unsupported batched edge reduction {s.reduce_op}")
+            seg = ectx.seg if s.target == ectx.source else ectx.nid
+            sorted_ = ectx.seg_sorted if s.target == ectx.source else False
+            if batched_target:
+                masked = f"jnp.where({ectx.mask}, {e}, 0)" if ectx.mask else e
+                em.w(f"{p} = {p} + rt.segment_sum_batch("
+                     f"jnp.broadcast_to(jnp.asarray({masked}), ({b.size},) + {seg}.shape), "
+                     f"{seg}, {self.VLEN}, sorted_ids={sorted_})")
+            else:
+                m = (f"({ectx.mask}) & {b.valid}[:, None]" if ectx.mask
+                     else f"{b.valid}[:, None]")
+                em.w(f"{p} = {p} + rt.segment_sum(jnp.sum("
+                     f"jnp.broadcast_to(jnp.asarray(jnp.where({m}, {e}, 0)), ({b.size},) + {seg}.shape), "
+                     f"axis=0), {seg}, {self.VLEN}, sorted_ids={sorted_})")
+            return
+        if vctx is None:
+            raise CodegenError("property assignment outside any loop")
+        if batched_target:
+            if s.reduce_op is None:
+                if vctx.mask:
+                    em.w(f"{p} = jnp.where({vctx.mask}, {e}, {p})")
+                else:
+                    em.w(f"{p} = jnp.broadcast_to(jnp.asarray({e}, {p}.dtype), {p}.shape)")
+            else:
+                op = _RED[s.reduce_op]
+                if vctx.mask:
+                    em.w(f"{p} = jnp.where({vctx.mask}, {p} {op} ({e}), {p})")
+                else:
+                    em.w(f"{p} = {p} {op} ({e})")
+            return
+        # shared [N] target: collapse the lane axis (valid lanes only)
+        if s.reduce_op != "+":
+            raise CodegenError(
+                f"write to shared property {s.prop} inside a batched source "
+                f"loop needs a '+' reduction (got {s.reduce_op!r})")
+        m = (f"({vctx.mask}) & {b.valid}[:, None]" if vctx.mask
+             else f"{b.valid}[:, None]")
+        em.w(f"{p} = {p} + jnp.sum(jnp.where({m}, {e}, 0), axis=0)")
 
     def _hybrid_frontier(self, s: I.IMinMaxUpdate, ectx):
         """Detect the frontier-relax pattern `Min(t.p, other.p + e.weight)`
@@ -337,6 +489,9 @@ class LocalCodegen:
 
     def s_IMinMaxUpdate(self, s: I.IMinMaxUpdate, ctx):
         em = self.em
+        if self.batch is not None:
+            raise CodegenError("Min/Max construct inside a batched source "
+                               "loop (falls back to the sequential lowering)")
         ectx = self._edge_ctx(ctx)
         if ectx is None:
             raise CodegenError("Min/Max update outside a neighbor loop")
@@ -397,9 +552,8 @@ class LocalCodegen:
                 raise CodegenError("else in edge context unsupported")
             return
         if vctx is not None:
-            mask = em.uid("vm")
             cond = self.ex.expr(s.cond, ctx)
-            em.w(f"{mask} = {f'{vctx.mask} & ' if vctx.mask else ''}{cond}")
+            mask = self._vmask(f"{f'{vctx.mask} & ' if vctx.mask else ''}{cond}")
             import dataclasses as _dc
             sub = _dc.replace(vctx, mask=mask)
             self.body(s.then, sub)
@@ -410,6 +564,8 @@ class LocalCodegen:
 
     def s_IFixedPoint(self, s: I.IFixedPoint, ctx):
         em = self.em
+        if self.batch is not None:
+            raise CodegenError("fixedPoint inside a batched source loop")
         conv = s.conv_prop
         self.declare(s.var, "bool")
         em.w(f"{s.var} = jnp.asarray(False)")
@@ -443,6 +599,8 @@ class LocalCodegen:
 
     def s_IDoWhile(self, s: I.IDoWhile, ctx):
         em = self.em
+        if self.batch is not None:
+            raise CodegenError("do-while inside a batched source loop")
         carry = self.carries(s.body)
         pack = ", ".join(carry)
         n = em.uid("dw")
@@ -461,6 +619,8 @@ class LocalCodegen:
 
     def s_IWhile(self, s: I.IWhile, ctx):
         em = self.em
+        if self.batch is not None:
+            raise CodegenError("while inside a batched source loop")
         carry = self.carries(s.body)
         pack = ", ".join(carry)
         n = em.uid("wl")
@@ -477,6 +637,19 @@ class LocalCodegen:
         em.w(f"({pack},) = _state" if len(carry) == 1 else f"({pack}) = _state")
 
     def s_ISetLoop(self, s: I.ISetLoop, ctx):
+        bs = (ENGINE.batch_sources if self.batch_sources is None
+              else self.batch_sources)
+        if self.supports_source_batching and self.batch is None and bs and bs > 1:
+            state = self._snapshot()
+            try:
+                return self._batched_set_loop(s, ctx, int(bs))
+            except CodegenError:
+                # pattern outside the batched subset (fixedPoint, Min/Max,
+                # per-source scalars, ...): fall back to the sequential loop
+                self._restore(state)
+        self._sequential_set_loop(s, ctx)
+
+    def _sequential_set_loop(self, s: I.ISetLoop, ctx):
         em = self.em
         carry = self.carries(s.body)
         pack = ", ".join(carry)
@@ -491,8 +664,54 @@ class LocalCodegen:
             self.body(s.body, hctx)
             em.w(f"return ({pack},)" if len(carry) == 1 else f"return ({pack})")
         del self.declared[mark:]   # loop-local props don't escape
-        em.w(f"_carry = jax.lax.fori_loop(0, {s.set_name}.shape[0], {n}_body, ({pack}{',' if len(carry) == 1 else ''}))")
-        em.w(f"({pack},) = _carry" if len(carry) == 1 else f"({pack}) = _carry")
+        # static shape guard: fori_loop traces its body even for a zero trip
+        # count, and indexing an empty sourceSet would fail at trace time
+        em.w(f"if {s.set_name}.shape[0]:")
+        with em.block():
+            em.w(f"_carry = jax.lax.fori_loop(0, {s.set_name}.shape[0], {n}_body, ({pack}{',' if len(carry) == 1 else ''}))")
+            em.w(f"({pack},) = _carry" if len(carry) == 1 else f"({pack}) = _carry")
+
+    def _batched_set_loop(self, s: I.ISetLoop, ctx, bs: int):
+        """`forall(src in sourceSet)` as ceil(S/B) chunked BATCHED passes:
+        each chunk traverses B sources at once (per-source [N] properties
+        become [B, N] matrices, every SpMV a B-lane SpMM) and reduces its
+        contribution into the shared properties at chunk end. The final
+        partial chunk is padded with repeats of the last source and masked
+        out of every shared-property reduction, so S need not divide B."""
+        em = self.em
+        ss = s.set_name
+        carry = self.carries(s.body)
+        pack = ", ".join(carry)
+        n = em.uid("bset")
+        B, lane, srcs, ok = f"{n}_B", f"{n}_lane", f"{n}_src", f"{n}_ok"
+        mark = len(self.declared)
+        em.w(f"{B} = max(min({bs}, {ss}.shape[0]), 1)")
+        em.w(f"def {n}_body(_c, _carry):")
+        with em.block():
+            em.w(f"({pack},) = _carry" if len(carry) == 1 else f"({pack}) = _carry")
+            em.w(f"{n}_idx = _c * {B} + jnp.arange({B}, dtype=jnp.int32)")
+            em.w(f"{ok} = {n}_idx < {ss}.shape[0]")
+            em.w(f"{srcs} = {ss}[jnp.clip({n}_idx, 0, {ss}.shape[0] - 1)]")
+            em.w(f"{lane} = jnp.arange({B}, dtype=jnp.int32)")
+            info = BatchInfo(size=B, lane=lane, srcs=srcs,
+                             srcs2d=f"{srcs}[:, None]", valid=ok, it=s.it)
+            self.batch = info
+            self.ex.batch = info
+            hctx = HostCtx()
+            hctx.node_bindings[s.it] = info.srcs2d
+            try:
+                self.body(s.body, hctx)
+            finally:
+                self.batch = None
+                self.ex.batch = None
+            em.w(f"return ({pack},)" if len(carry) == 1 else f"return ({pack})")
+        del self.declared[mark:]   # loop-local props don't escape
+        # static shape guard: fori_loop traces its body even for a zero trip
+        # count, and indexing an empty sourceSet would fail at trace time
+        em.w(f"if {ss}.shape[0]:")
+        with em.block():
+            em.w(f"_carry = jax.lax.fori_loop(0, -(-{ss}.shape[0] // {B}), {n}_body, ({pack}{',' if len(carry) == 1 else ''}))")
+            em.w(f"({pack},) = _carry" if len(carry) == 1 else f"({pack}) = _carry")
 
     def s_IBFS(self, s: I.IBFS, ctx):
         em = self.em
@@ -500,7 +719,16 @@ class LocalCodegen:
         root = self.ex.expr(s.root, ctx)
         lvl = em.uid("level")
         dep = em.uid("depth")
-        em.w(f"{lvl}, {dep} = rt.bfs_levels({g}, {root})")
+        if self.batch is not None:
+            if root != self.batch.srcs2d:
+                raise CodegenError("batched iterateInBFS root must be the "
+                                   "set iterator")
+            # one batched BFS: level[b] == bfs_levels(g, srcs[b]); depth is
+            # the deepest lane's count — shallower lanes see empty frontiers
+            em.w(f"{lvl}, {dep} = rt.bfs_levels_batch({g}, {self.batch.srcs})")
+            self.batch.arrays.add(lvl)
+        else:
+            em.w(f"{lvl}, {dep} = rt.bfs_levels({g}, {root})")
         # forward pass: level-synchronous over the BFS DAG
         carry = self.carries(s.body)
         pack = ", ".join(carry)
@@ -523,8 +751,7 @@ class LocalCodegen:
         with em.block():
             em.w(f"({pack},) = _carry" if len(carry) == 1 else f"({pack}) = _carry")
             em.w(f"_l = {dep} - 2 - _k")
-            vm = em.uid("vm")
-            em.w(f"{vm} = ({lvl} == _l)")
+            vm = self._vmask(f"({lvl} == _l)")
             bctx = BFSCtx(it=s.it, level=lvl, cur="_l", mask=vm, parent=ctx)
             if s.rev_filter is not None:
                 em.w(f"{vm} = {vm} & ({self.ex.expr(s.rev_filter, bctx)})")
@@ -549,6 +776,8 @@ class LocalCodegen:
         red = iff.then[0] if len(iff.then) == 1 and isinstance(iff.then[0], I.IAssign) else None
         if red is None or red.reduce_op != "+":
             raise CodegenError("wedge body must be a count reduction")
+        if self.batch is not None:
+            raise CodegenError("wedge pattern inside a batched source loop")
         g = self.f.graph_param
         dt = self.dtype_of(red.name)
         acc = f"{red.name} + rt.wedge_count({g}) * ({self.ex.expr(red.expr, HostCtx())})"
@@ -561,5 +790,7 @@ def s_target_source(s: I.IAssignProp, ectx) -> str:
     return ectx.source
 
 
-def generate_local(irfn: I.IRFunction) -> str:
-    return LocalCodegen(irfn).generate()
+def generate_local(irfn: I.IRFunction, batch_sources: Optional[int] = None) -> str:
+    """`batch_sources=None` reads `ENGINE.batch_sources` at generation time;
+    pass an int (0/1 = off) to pin the source-batch width per program."""
+    return LocalCodegen(irfn, batch_sources=batch_sources).generate()

@@ -109,8 +109,8 @@ class PallasCodegen(LocalCodegen):
         super().s_IAssign(s, ctx)
 
 
-def generate_pallas(irfn: I.IRFunction, **opts):
-    cg = PallasCodegen(irfn)
+def generate_pallas(irfn: I.IRFunction, batch_sources=None, **opts):
+    cg = PallasCodegen(irfn, batch_sources=batch_sources)
     body = cg.generate()
     from ...kernels.ell_spmv import ops as kops
     return body, {"kops": kops}

@@ -55,28 +55,100 @@ def segment_max(vals, seg_ids, num_segments, sorted_ids=True):
                                indices_are_sorted=sorted_ids)
 
 
+# --- batched (multi-source) scatter / segment combines -----------------------
+#
+# The batched engine carries per-source properties as [B, N] matrices; the
+# per-edge values they induce are [B, E]. Segment ops segment over the
+# LEADING axis, so the batched variants run on the [E, B] transpose — one
+# fused segmented reduction with B lanes, not B reductions.
+
+def _seg_batch(op, vals, seg_ids, num_segments, sorted_ids):
+    return op(jnp.swapaxes(vals, 0, 1), seg_ids, num_segments=num_segments,
+              indices_are_sorted=sorted_ids).swapaxes(0, 1)
+
+
+def segment_sum_batch(vals, seg_ids, num_segments, sorted_ids=True):
+    """vals [B, E], seg_ids [E] → [B, num_segments]."""
+    return _seg_batch(jax.ops.segment_sum, vals, seg_ids, num_segments, sorted_ids)
+
+
+def segment_min_batch(vals, seg_ids, num_segments, sorted_ids=True):
+    return _seg_batch(jax.ops.segment_min, vals, seg_ids, num_segments, sorted_ids)
+
+
+def segment_max_batch(vals, seg_ids, num_segments, sorted_ids=True):
+    return _seg_batch(jax.ops.segment_max, vals, seg_ids, num_segments, sorted_ids)
+
+
+def scatter_min_rows(current, idx, cand):
+    """Row-wise scatter-min: current [B, N], idx [E], cand [B, E]."""
+    return current.at[:, idx].min(cand)
+
+
+def scatter_add_rows(current, idx, vals):
+    return current.at[:, idx].add(vals)
+
+
+def scatter_or_rows(current, idx, vals):
+    return current.at[:, idx].max(vals)
+
+
 # --- graph queries ------------------------------------------------------------
 
-def _edge_key_dtype(n: int):
-    if n * n >= 2**31:
-        raise ValueError(
-            f"is_an_edge key space overflows int32 for n={n}; "
-            "enable x64 or use the ELL membership path")
-    return jnp.int32
+def _edge_key_fits_i32(n: int) -> bool:
+    return n * n < 2**31
 
 
-def is_an_edge(g: CSRGraph, u: jax.Array, w: jax.Array) -> jax.Array:
-    """Membership test via binary search over the sorted (src, dst) key —
-    the paper's `is_an_edge` with sorted-CSR binary search (§5.1 TC). The
-    key array is cached on the graph (built once in `from_edges`)."""
-    if g.num_edges == 0:
-        return jnp.zeros(jnp.broadcast_shapes(u.shape, w.shape), jnp.bool_)
-    dt = _edge_key_dtype(g.num_nodes)
+def _is_an_edge_keyed(g: CSRGraph, u, w):
+    """Fast path: binary search over the cached sorted (src·N + dst) int32
+    key — only valid while N² fits int32."""
     key = g.edge_key
-    q = u.astype(dt) * g.num_nodes + w.astype(dt)
+    q = u.astype(jnp.int32) * g.num_nodes + w.astype(jnp.int32)
     pos = jnp.searchsorted(key, q)
     pos = jnp.clip(pos, 0, key.shape[0] - 1)
     return key[pos] == q
+
+
+def _is_an_edge_rowsearch(g: CSRGraph, u, w):
+    """Large-graph path (N² ≥ 2³¹): per-query binary search of `w` inside
+    CSR row `u` — a fixed-iteration lower_bound over indices[indptr[u] :
+    indptr[u+1]], so no composite key (and no int64) is ever formed."""
+    e = g.num_edges
+    n = g.num_nodes
+    uc = jnp.clip(u, 0, n - 1)
+    lo = g.indptr[uc].astype(jnp.int32)
+    row_end = g.indptr[uc + 1].astype(jnp.int32)
+    lo = jnp.broadcast_to(lo, jnp.broadcast_shapes(lo.shape, jnp.shape(w)))
+    hi = jnp.broadcast_to(row_end, lo.shape)
+    steps = max(int(g.max_out_degree), 1).bit_length() + 1
+
+    def body(_, state):
+        lo, hi = state
+        active = lo < hi
+        mid = (lo + hi) >> 1
+        v = g.indices[jnp.clip(mid, 0, e - 1)]
+        go_right = v < w
+        return (jnp.where(active & go_right, mid + 1, lo),
+                jnp.where(active & ~go_right, mid, hi))
+
+    lo, _ = jax.lax.fori_loop(0, steps, body, (lo, hi))
+    return ((lo < row_end) & (g.indices[jnp.clip(lo, 0, e - 1)] == w)
+            & (u >= 0) & (u < n))   # match the keyed path on out-of-range u
+
+
+def is_an_edge(g: CSRGraph, u: jax.Array, w: jax.Array) -> jax.Array:
+    """Membership test — the paper's `is_an_edge` with sorted-CSR binary
+    search (§5.1 TC). Small graphs search the cached composite int32 key;
+    graphs whose N² would overflow int32 fall back to a row-range binary
+    search (no key materialized). Broadcasts over u/w."""
+    if g.num_edges == 0:
+        return jnp.zeros(jnp.broadcast_shapes(jnp.shape(u), jnp.shape(w)),
+                         jnp.bool_)
+    u = jnp.asarray(u)
+    w = jnp.asarray(w)
+    if _edge_key_fits_i32(g.num_nodes):
+        return _is_an_edge_keyed(g, u, w)
+    return _is_an_edge_rowsearch(g, u, w)
 
 
 # --- frontier engine (direction-optimizing traversal) --------------------------
@@ -116,9 +188,12 @@ def relax_minplus_hybrid(g: CSRGraph, dist: jax.Array,
     exactly, so the switch never changes results. `frontier=None` is a dense
     sweep (every vertex contributes).
 
-    NOTE: the local backend emits this same push/pull pair inline
-    (local_jax.emit_relax_hybrid) so the generated source stays inspectable;
-    keep the two in sync."""
+    NOTE: this push/pull relaxation pair exists in four places — here, the
+    batched form below (`relax_minplus_hybrid_batch`), the kernel-backed
+    ops (kernels/ell_spmv/ops.py `_relax_push`/`_relax_sliced_pull`), and
+    inline in the local backend's generated source
+    (local_jax.emit_relax_hybrid, kept inline so the lowering stays
+    inspectable). A semantic change to any copy must be applied to all."""
     n = g.num_nodes
 
     def push(d):
@@ -180,6 +255,132 @@ def bfs_levels(g: CSRGraph, root, max_levels: int | None = None):
     return level, depth
 
 
+# --- batched multi-source traversal engine -------------------------------------
+#
+# S independent traversals over the same graph run the same kernels S times;
+# batching B sources turns every per-bucket SpMV into an SpMM with B lanes
+# (Brandes-style multi-source BC, multi-query SSSP). State is [B, N]: row b
+# is source b's property vector. The direction choice generalizes per batch
+# ROW — each source's frontier empties on its own schedule — with whole-batch
+# fast paths (all-push / all-pull) so the homogeneous case, by far the most
+# common, still evaluates only one direction.
+
+def frontier_rows_should_push(frontier: jax.Array, n: int,
+                              threshold_frac: float | None = None) -> jax.Array:
+    """Per-row push/pull choice for a [B, N] batched frontier → bool[B]."""
+    frac = ENGINE.push_threshold_frac if threshold_frac is None else threshold_frac
+    occ = jnp.sum(frontier.astype(jnp.int32), axis=1)
+    return occ <= jnp.int32(max(int(n * frac), 1))
+
+
+def _cond_by_rows(rows_push, push_all, pull_all, mixed, arg):
+    """Dispatch on the per-row direction vector: homogeneous batches take a
+    single-direction branch; mixed batches evaluate both, each masked to its
+    rows (the masks make the two halves disjoint, so combining is exact)."""
+    return jax.lax.cond(
+        jnp.all(rows_push), push_all,
+        lambda a: jax.lax.cond(jnp.any(rows_push), mixed, pull_all, a),
+        arg)
+
+
+def relax_minplus_hybrid_batch(g: CSRGraph, dist: jax.Array,
+                               frontier: jax.Array | None = None,
+                               threshold_frac: float | None = None) -> jax.Array:
+    """Batched SSSP/min-plus relaxation: dist [B, N], frontier [B, N] bool.
+
+    Row-for-row identical to `relax_minplus_hybrid` on each dist row with its
+    frontier row — push rows scatter-min over out-edges, pull rows gather/
+    segment-min over in-edges, and rows are routed independently. (One of
+    the four push/pull copies — see the NOTE on `relax_minplus_hybrid`.)"""
+    n = g.num_nodes
+
+    def push(d, fr):
+        cand = d[:, g.edge_src] + g.weights[None, :]
+        if fr is not None:
+            cand = jnp.where(fr[:, g.edge_src], cand, INF)
+        return scatter_min_rows(d, g.indices, cand)
+
+    def pull(d, fr):
+        cand = d[:, g.rev_indices] + g.rev_weights[None, :]
+        if fr is not None:
+            cand = jnp.where(fr[:, g.rev_indices], cand, INF)
+        return jnp.minimum(d, segment_min_batch(cand, g.rev_edge_dst, n))
+
+    if frontier is None:
+        return pull(dist, None)
+    rows_push = frontier_rows_should_push(frontier, n, threshold_frac)
+    return _cond_by_rows(
+        rows_push,
+        lambda d: push(d, frontier),
+        lambda d: pull(d, frontier),
+        lambda d: pull(push(d, frontier & rows_push[:, None]),
+                       frontier & ~rows_push[:, None]),
+        dist)
+
+
+def bfs_levels_batch(g: CSRGraph, roots: jax.Array,
+                     threshold_frac: float | None = None):
+    """Batched level-synchronous BFS from roots[B] with per-row direction
+    optimization. Returns (level int32[B, N], depth) — row b equals
+    `bfs_levels(g, roots[b])[0]`; depth is the deepest row's level count, so
+    shallower rows simply see empty frontiers at the tail levels."""
+    n = g.num_nodes
+    b = roots.shape[0]
+    lanes = jnp.arange(b, dtype=jnp.int32)
+    level0 = jnp.full((b, n), -1, jnp.int32).at[lanes, roots].set(0)
+
+    def cond(state):
+        _, cur, changed = state
+        return changed
+
+    def body(state):
+        level, cur, _ = state
+        frontier = level == cur
+
+        def push(fr):
+            return scatter_or_rows(jnp.zeros((b, n), jnp.bool_), g.indices,
+                                   fr[:, g.edge_src])
+
+        def pull(fr):
+            return segment_max_batch(fr[:, g.rev_indices].astype(jnp.int32),
+                                     g.rev_edge_dst, n) > 0
+
+        rows_push = frontier_rows_should_push(frontier, n, threshold_frac)
+        reach = _cond_by_rows(
+            rows_push, push, pull,
+            lambda fr: push(fr & rows_push[:, None]) | pull(fr & ~rows_push[:, None]),
+            frontier)
+        newly = reach & (level < 0)
+        level = jnp.where(newly, cur + 1, level)
+        return level, cur + 1, jnp.any(newly)
+
+    level, depth, _ = jax.lax.while_loop(
+        cond, body, (level0, jnp.int32(0), jnp.bool_(True)))
+    return level, depth
+
+
+def sssp_multi(g: CSRGraph, sources: jax.Array,
+               threshold_frac: float | None = None) -> jax.Array:
+    """Multi-query SSSP: one batched fixed point answering B source queries
+    per sweep. Returns dist int32[B, N]; row b == SSSP from sources[b]."""
+    n = g.num_nodes
+    b = sources.shape[0]
+    lanes = jnp.arange(b, dtype=jnp.int32)
+    dist0 = jnp.full((b, n), INF, jnp.int32).at[lanes, sources].set(0)
+    fr0 = jnp.zeros((b, n), jnp.bool_).at[lanes, sources].set(True)
+
+    def cond(state):
+        return jnp.any(state[1])
+
+    def body(state):
+        d, fr = state
+        d2 = relax_minplus_hybrid_batch(g, d, fr, threshold_frac)
+        return d2, d2 < d
+
+    dist, _ = jax.lax.while_loop(cond, body, (dist0, fr0))
+    return dist
+
+
 # --- triangle counting (the paper's Fig. 20 wedge pattern) ----------------------
 
 def wedge_count(g: CSRGraph, chunk: int = 512) -> jax.Array:
@@ -191,8 +392,6 @@ def wedge_count(g: CSRGraph, chunk: int = 512) -> jax.Array:
     if g.num_edges == 0:
         return jnp.int32(0)
     max_deg = max(g.max_out_degree, 1)   # static (host-side) metadata
-    dt = _edge_key_dtype(n)
-    key = g.edge_key                     # cached sorted (src·N + dst)
 
     def row_nbrs(vs):
         # [C, D] neighbor ids (n = padding)
@@ -213,9 +412,7 @@ def wedge_count(g: CSRGraph, chunk: int = 512) -> jax.Array:
         vv = vs_c[:, None, None]
         mask = (valid[:, :, None] & valid[:, None, :]
                 & (u < vv) & (w > vv) & vs_ok[:, None, None])
-        q = u.astype(dt) * n + w.astype(dt)
-        pos = jnp.clip(jnp.searchsorted(key, q.ravel()), 0, key.shape[0] - 1)
-        hit = (key[pos] == q.ravel()).reshape(q.shape)
+        hit = is_an_edge(g, u, w)        # keyed or row-search, per graph size
         return acc + jnp.sum(jnp.where(mask, hit, False).astype(jnp.int32))
 
     return jax.lax.fori_loop(0, num_chunks, chunk_count, jnp.int32(0))
@@ -228,6 +425,15 @@ def init_prop(n, dtype, value=None):
     if value is None:
         return jnp.zeros((n,), dt)
     return jnp.full((n,), value, dt)
+
+
+def init_prop_batch(b, n, dtype, value=None):
+    """[B, N] per-source property block (batched set-loop chunk). `value`
+    may be a scalar or an [N] vector (broadcast across the batch rows)."""
+    dt = jnp.dtype(dtype)
+    if value is None:
+        return jnp.zeros((b, n), dt)
+    return jnp.broadcast_to(jnp.asarray(value, dt), (b, n))
 
 
 def inf_for(dtype):

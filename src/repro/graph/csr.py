@@ -33,6 +33,12 @@ class EngineConfig:
     growth: int = 4               # geometric width growth between buckets
     push_threshold_frac: float = 1.0 / 16.0  # frontier occupancy below which
     # the engine relaxes push-style (scatter) instead of pull (gather/kernel)
+    batch_sources: int = 32       # sources traversed per batched sweep in
+    # `forall(src in sourceSet)` (BC & friends): per-source [N] properties
+    # become [B, N] matrices and every per-bucket SpMV becomes an SpMM with
+    # B lanes. 0 or 1 disables batching (sequential per-source fori_loop).
+    # Working-set tradeoff: each batched chunk materializes B·N property
+    # cells per per-source property.
 
 
 ENGINE = EngineConfig()

@@ -1,4 +1,4 @@
-"""Block-ELL semiring SpMV Pallas kernel.
+"""Block-ELL semiring SpMV/SpMM Pallas kernel.
 
 The paper's CUDA relax kernel (Fig. 9) is thread-per-vertex with atomicMin
 into the neighbor. TPU restructuring: the CSR is padded to a rectangular
@@ -9,7 +9,14 @@ the degree axis — a *pull* formulation, so no atomics/scatter exist at all.
   minplus   : y[i] = min_k ( x[cols[i,k]] + vals[i,k] )     (SSSP relax)
   plustimes : y[i] = sum_k ( x[cols[i,k]] * vals[i,k] )     (PR gather)
 
-VMEM budget per grid step: BR*D*(4+4) bytes for the tile + (N+1)*4 for x.
+The operand generalizes over a batch of sources: x may be a [N+1] vector
+(SpMV, single traversal) or a [N+1, B] matrix (SpMM — B batch lanes, one
+per source of a multi-source traversal). The gather then pulls whole
+B-lane rows of x, and the degree-axis reduction is elementwise across
+lanes, which is exactly the layout a vector/matrix unit wants: lanes =
+batch, sublanes = degree.
+
+VMEM budget per grid step: BR*D*(4+4) bytes for the tile + (N+1)*B*4 for x.
 For graphs whose x exceeds VMEM, shard rows across devices first (the
 distributed backend does exactly that) — each shard's x block then fits.
 Padding protocol: cols pad = N (sentinel row of x, holding the semiring
@@ -27,8 +34,10 @@ from jax.experimental import pallas as pl
 def _minplus_body(cols_ref, vals_ref, x_ref, y_ref):
     cols = cols_ref[...]                    # [BR, D] int32
     vals = vals_ref[...]                    # [BR, D] int32
-    x = x_ref[...]                          # [N+1]   int32
-    gathered = jnp.take(x, cols, axis=0)    # Mosaic: dynamic gather from VMEM
+    x = x_ref[...]                          # [N+1] or [N+1, B] int32
+    gathered = jnp.take(x, cols, axis=0)    # [BR, D] or [BR, D, B]
+    if x.ndim == 2:
+        vals = vals[..., None]              # broadcast weights across lanes
     y_ref[...] = jnp.min(gathered + vals, axis=1)
 
 
@@ -37,6 +46,8 @@ def _plustimes_body(cols_ref, vals_ref, x_ref, y_ref):
     vals = vals_ref[...]
     x = x_ref[...]
     gathered = jnp.take(x, cols, axis=0)
+    if x.ndim == 2:
+        vals = vals[..., None]
     y_ref[...] = jnp.sum(gathered * vals, axis=1)
 
 
@@ -46,22 +57,32 @@ def ell_spmv(cols: jax.Array, vals: jax.Array, x: jax.Array, *,
              interpret: bool = True) -> jax.Array:
     """cols/vals: [R, D] (R divisible by block_rows); x: the gather source,
     VMEM-resident, with the sentinel slot last (so any length ≥ max(cols)+1 —
-    sliced-ELL buckets have R ≪ len(x)). Returns y: [R]."""
+    sliced-ELL buckets have R ≪ len(x)). x may be [M] (SpMV → y [R]) or
+    [M, B] (SpMM over B batch lanes → y [R, B])."""
     n, d = cols.shape
     assert n % block_rows == 0, (n, block_rows)
     m = x.shape[0]
     body = _minplus_body if semiring == "minplus" else _plustimes_body
     grid = (n // block_rows,)
+    if x.ndim == 1:
+        x_spec = pl.BlockSpec((m,), lambda i: (0,))
+        out_spec = pl.BlockSpec((block_rows,), lambda i: (i,))
+        out_shape = jax.ShapeDtypeStruct((n,), x.dtype)
+    else:
+        b = x.shape[1]
+        x_spec = pl.BlockSpec((m, b), lambda i: (0, 0))
+        out_spec = pl.BlockSpec((block_rows, b), lambda i: (i, 0))
+        out_shape = jax.ShapeDtypeStruct((n, b), x.dtype)
     return pl.pallas_call(
         body,
         grid=grid,
         in_specs=[
             pl.BlockSpec((block_rows, d), lambda i: (i, 0)),   # cols tile
             pl.BlockSpec((block_rows, d), lambda i: (i, 0)),   # vals tile
-            pl.BlockSpec((m,), lambda i: (0,)),                # x resident
+            x_spec,                                            # x resident
         ],
-        out_specs=pl.BlockSpec((block_rows,), lambda i: (i,)),
-        out_shape=jax.ShapeDtypeStruct((n,), x.dtype),
+        out_specs=out_spec,
+        out_shape=out_shape,
         interpret=interpret,
     )(cols, vals, x)
 

@@ -105,10 +105,13 @@ def _gather_dense(cols, contrib, *, block_rows: int = 256):
 # --------------------------------------------------------------------------
 
 def _bucket_minplus(cols, wts, x):
+    """x: [M] (SpMV) or [M, B] (SpMM, lanes = source batch)."""
     if _USE_KERNEL:
         return ell_spmv(cols, wts, x, semiring="minplus",
                         block_rows=_best_block(cols.shape[0]),
                         interpret=_INTERPRET)
+    if x.ndim == 2:
+        wts = wts[..., None]
     return jnp.min(jnp.take(x, cols, axis=0) + wts, axis=1)
 
 
@@ -124,22 +127,37 @@ def _bucket_plustimes(cols, x):
 def _relax_sliced_pull(ell: SlicedEllGraph, dist, frontier=None):
     """Masked-pull sweep: per-bucket min-plus kernels + COO hub fallback.
     Frontier masking happens on the gather source (x), so the kernels stay
-    unmasked and rectangular."""
+    unmasked and rectangular. dist may be [N] (one traversal) or [B, N]
+    (batched: the gathered operand becomes the [N+1, B] matrix the SpMM
+    kernel consumes — batch lanes minor, so every bucket tile is reused
+    across all B sources in one pass). This and `_relax_push` are the
+    kernel-layer copies of the push/pull relaxation — keep in sync with
+    runtime.relax_minplus_hybrid (see the NOTE there)."""
     n = ell.num_nodes
     x = dist if frontier is None else jnp.where(frontier, dist, INF)
-    # sentinel slot (index n) holds 0 so INF pad weights never overflow
-    x_ext = jnp.zeros((n + 1,), dist.dtype).at[:n].set(x)
-    y = jnp.full((n,), INF, dist.dtype)
+    batched = dist.ndim == 2
+    if batched:
+        # sentinel slot (index n) holds 0 so INF pad weights never overflow
+        x_ext = jnp.zeros((n + 1, dist.shape[0]), dist.dtype).at[:n].set(x.T)
+        y = jnp.full((n, dist.shape[0]), INF, dist.dtype)
+    else:
+        x_ext = jnp.zeros((n + 1,), dist.dtype).at[:n].set(x)
+        y = jnp.full((n,), INF, dist.dtype)
     for cols, wts, rows in zip(ell.cols, ell.wts, ell.rows):
         y = y.at[rows].min(_bucket_minplus(cols, wts, x_ext), mode="drop")
     if ell.hub_rows.shape[0]:
-        y = y.at[ell.hub_rows].min(x_ext[ell.hub_cols] + ell.hub_wts,
-                                   mode="drop")
-    return jnp.minimum(dist, y)
+        hub_w = ell.hub_wts[:, None] if batched else ell.hub_wts
+        y = y.at[ell.hub_rows].min(x_ext[ell.hub_cols] + hub_w, mode="drop")
+    return jnp.minimum(dist, y.T if batched else y)
 
 
 def _relax_push(g: CSRGraph, dist, frontier):
-    """Scatter-push from the (sparse) frontier over out-edges."""
+    """Scatter-push from the (sparse) frontier over out-edges.
+    dist/frontier: [N] or [B, N] (row-wise scatter-min)."""
+    if dist.ndim == 2:
+        cand = dist[:, g.edge_src] + g.weights[None, :]
+        cand = jnp.where(frontier[:, g.edge_src], cand, INF)
+        return dist.at[:, g.indices].min(cand)
     cand = dist[g.edge_src] + g.weights
     cand = jnp.where(frontier[g.edge_src], cand, INF)
     return dist.at[g.indices].min(cand)
@@ -158,14 +176,36 @@ def relax_minplus(cols_or_ell, wts_or_dist, dist=None, *, frontier=None,
     under `ENGINE.push_threshold_frac · N` the relax runs push-style over
     the CSR out-edges (scatter-min), otherwise as per-bucket pull kernels.
     Both directions compute the identical relaxation, so the on-device
-    `lax.cond` switch never changes results."""
+    `lax.cond` switch never changes results.
+
+    Batched sliced form: dist/frontier [B, N] — the pull sweep becomes a
+    per-bucket min-plus SpMM over the [N+1, B] operand, and the push/pull
+    choice is made per batch ROW (homogeneous batches take a single-
+    direction fast path; mixed batches run each direction masked to its
+    rows, which partition the frontier, so the result is exact)."""
     if not isinstance(cols_or_ell, SlicedEllGraph):
         return _relax_dense(cols_or_ell, wts_or_dist, dist,
                             block_rows=block_rows)
+    if dist is not None:
+        raise TypeError(
+            "sliced form takes (ell, dist) positionally; pass the frontier "
+            "as relax_minplus(ell, dist, frontier=fr, csr=g)")
     ell, dist = cols_or_ell, wts_or_dist
     if frontier is None or csr is None:
         return _relax_sliced_pull(ell, dist, frontier)
-    from ...core.runtime import frontier_should_push  # one threshold heuristic
+    from ...core.runtime import (_cond_by_rows, frontier_rows_should_push,
+                                 frontier_should_push)
+    if dist.ndim == 2:
+        rows_push = frontier_rows_should_push(frontier, ell.num_nodes,
+                                              threshold_frac)
+        return _cond_by_rows(
+            rows_push,
+            lambda d: _relax_push(csr, d, frontier),
+            lambda d: _relax_sliced_pull(ell, d, frontier),
+            lambda d: _relax_sliced_pull(
+                ell, _relax_push(csr, d, frontier & rows_push[:, None]),
+                frontier & ~rows_push[:, None]),
+            dist)
     return jax.lax.cond(
         frontier_should_push(frontier, ell.num_nodes, threshold_frac),
         lambda d: _relax_push(csr, d, frontier),
@@ -179,15 +219,23 @@ def gather_plustimes(cols_or_ell, contrib, n_out: int = None, *,
     by out-degree.
 
     Dense form: `gather_plustimes(cols, contrib)` (returns padded rows).
-    Sliced form: `gather_plustimes(ell, contrib)` (returns exactly [N])."""
+    Sliced form: `gather_plustimes(ell, contrib)` (returns exactly [N]).
+    Batched sliced form: contrib [B, N] → [B, N] (plus-times SpMM, one
+    bucket pass shared by all B lanes)."""
     if not isinstance(cols_or_ell, SlicedEllGraph):
         return _gather_dense(cols_or_ell, contrib, block_rows=block_rows)
     ell = cols_or_ell
     n = ell.num_nodes
-    x_ext = jnp.zeros((n + 1,), contrib.dtype).at[:n].set(contrib)
-    y = jnp.zeros((n,), contrib.dtype)
+    batched = contrib.ndim == 2
+    if batched:
+        x_ext = jnp.zeros((n + 1, contrib.shape[0]),
+                          contrib.dtype).at[:n].set(contrib.T)
+        y = jnp.zeros((n, contrib.shape[0]), contrib.dtype)
+    else:
+        x_ext = jnp.zeros((n + 1,), contrib.dtype).at[:n].set(contrib)
+        y = jnp.zeros((n,), contrib.dtype)
     for cols, _, rows in zip(ell.cols, ell.wts, ell.rows):
         y = y.at[rows].add(_bucket_plustimes(cols, x_ext), mode="drop")
     if ell.hub_rows.shape[0]:
         y = y.at[ell.hub_rows].add(x_ext[ell.hub_cols], mode="drop")
-    return y
+    return y.T if batched else y
