@@ -1,7 +1,9 @@
 """Batched multi-source traversal benchmark: the sequential per-source
 fori_loop (one full BFS + reverse pass per source) vs the batched engine
-(`ENGINE.batch_sources`: per-source [N] properties become [B, N] matrices,
-every per-bucket SpMV an SpMM with B lanes).
+(`Schedule.batch_sources`: per-source [N] properties become [B, N]
+matrices, every per-bucket SpMV an SpMM with B lanes). The two variants
+are two explicit `Schedule`s compiled side by side — the API the schedule
+separation exists for.
 
     PYTHONPATH=src python benchmarks/bench_batch.py [--smoke]
 
@@ -26,9 +28,8 @@ import numpy as np
 sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
 from common import timeit as _timeit_us  # noqa: E402  (shared methodology)
 
-from repro.core import compile_bundled, runtime as rt
+from repro.core import Schedule, compile_bundled, runtime as rt
 from repro.graph import preferential_attachment
-from repro.graph.csr import ENGINE
 
 OUT_PATH = os.path.join(os.path.dirname(__file__), "..", "BENCH_batch.json")
 
@@ -41,8 +42,10 @@ def timeit(fn, reps=3):
 
 def bench_bc(g, num_sources, batch, results, backend="local", reps=3):
     srcs = np.linspace(0, g.num_nodes - 1, num_sources).astype(np.int32)
-    seq = compile_bundled("bc", backend=backend, batch_sources=1)
-    bat = compile_bundled("bc", backend=backend, batch_sources=batch)
+    seq = compile_bundled("bc", backend=backend,
+                          schedule=Schedule(batch_sources=1))
+    bat = compile_bundled("bc", backend=backend,
+                          schedule=Schedule(batch_sources=batch))
     assert "bfs_levels_batch" in bat.source and "bfs_levels_batch" not in seq.source
 
     s_ms, s_out = timeit(lambda: seq(g, sourceSet=srcs)["BC"], reps)
@@ -95,11 +98,12 @@ def main():
         g = preferential_attachment(12000, m=8, seed=1)
         bc_sizes, batch, nq, reps = [32, 64], 32, 64, 3
 
+    sched = Schedule(batch_sources=batch)
     results = {"backend": jax.default_backend(),
                "config": {"smoke": args.smoke, "num_nodes": g.num_nodes,
                           "num_edges": g.num_edges, "batch_sources": batch,
-                          "engine": {"num_buckets": ENGINE.num_buckets,
-                                     "push_threshold_frac": ENGINE.push_threshold_frac}}}
+                          "engine": {"num_buckets": sched.num_buckets,
+                                     "push_threshold_frac": sched.push_threshold_frac}}}
     for s in bc_sizes:
         bench_bc(g, s, batch, results, reps=reps)
     bench_sssp_multi(g, nq, results, reps=reps)

@@ -4,7 +4,6 @@ from __future__ import annotations
 import time
 
 import jax
-import numpy as np
 
 from repro.graph import load_suite
 

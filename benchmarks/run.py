@@ -12,7 +12,7 @@ def main() -> None:
                     help="small graph subset (CI-speed)")
     args = ap.parse_args()
 
-    from .common import header, suite
+    from .common import header
     from . import (bench_fig17_scaling, bench_table3_openmp,
                    bench_table4_scheduling, bench_table5_mpi,
                    bench_table6_cuda)

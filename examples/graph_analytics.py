@@ -11,7 +11,7 @@ import numpy as np
 
 from repro.core import compile_bundled
 from repro.graph import load_suite
-from repro.graph.algorithms_ref import pagerank_ref, sssp_ref
+from repro.graph.algorithms_ref import sssp_ref
 
 
 def main():

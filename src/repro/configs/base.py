@@ -6,9 +6,8 @@ the full config as ShapeDtypeStructs only — no allocation.
 """
 from __future__ import annotations
 
-import dataclasses
-from dataclasses import dataclass, field, replace
-from typing import Optional, Tuple
+from dataclasses import dataclass, replace
+from typing import Optional
 
 
 @dataclass(frozen=True)

@@ -4,7 +4,13 @@ Frontend: lexer → parser → AST (§2.4) → semantic analysis → IR.
 Backends:  local (OpenMP analogue), distributed (MPI analogue, shard_map),
            pallas (CUDA analogue, TPU kernels).
 """
-from .api import CompiledProgram, compile_bundled, compile_program, load_program_source
+from ..schedule import DEFAULT_SCHEDULE, Schedule
+from .api import (BoundProgram, CompiledProgram, bundled_programs,
+                  compile_bundled, compile_cache_clear, compile_cache_size,
+                  compile_program, load_program_source)
+from .context import GraphContext, get_context, prepare
 
-__all__ = ["CompiledProgram", "compile_bundled", "compile_program",
-           "load_program_source"]
+__all__ = ["BoundProgram", "CompiledProgram", "DEFAULT_SCHEDULE",
+           "GraphContext", "Schedule", "bundled_programs", "compile_bundled",
+           "compile_cache_clear", "compile_cache_size", "compile_program",
+           "get_context", "load_program_source", "prepare"]

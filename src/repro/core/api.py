@@ -1,19 +1,34 @@
 """Public compiler API: StarPlat source → executable JAX program.
 
-    prog = compile_program(source, backend="local")
-    out  = prog(g, src=0)           # jitted
-    print(prog.source)              # generated Python/JAX text
+The algorithm/schedule split (GraphIt-style):
+
+    sched = Schedule(batch_sources=16)               # the schedule
+    prog  = compile_program(source, backend="pallas", schedule=sched)
+    bound = prog.bind(g)                             # per-graph entry point
+    out   = bound(src=0)                             # serve queries
+    print(prog.source)                               # generated Python/JAX
+
+`compile_program` is memoized on `(source digest, backend, schedule,
+fn_name, jit)`: repeated calls return the SAME `CompiledProgram` without
+re-parsing or re-exec'ing generated code — compile once per (program,
+schedule), prepare each graph once (`repro.core.context.prepare`), then
+serve. Per-graph derived structures (sliced-ELL views, distributed
+partitions) live in the shared `GraphContext` registry, not in
+backend-private caches.
 """
 from __future__ import annotations
 
+import dataclasses
+import hashlib
 import os
-import weakref
-from dataclasses import dataclass
 from typing import Callable, Optional
 
 import jax
 
+from ..graph.csr import resolve_schedule
+from ..schedule import Schedule
 from . import runtime as rt
+from .context import get_context
 from .lowering import lower
 from .parser import parse
 
@@ -26,7 +41,7 @@ _PRELUDE = (
 )
 
 
-@dataclass
+@dataclasses.dataclass(eq=False)
 class CompiledProgram:
     name: str
     backend: str
@@ -34,9 +49,65 @@ class CompiledProgram:
     fn: Callable         # compiled callable (jit according to backend)
     raw_fn: Callable     # un-jitted generated function
     ir: object
+    schedule: Schedule   # the schedule baked into `source`
+    dist_meta: Optional[dict] = None   # distributed backend: output specs
 
     def __call__(self, *args, **kwargs):
         return self.fn(*args, **kwargs)
+
+    def bind(self, g, *, mesh=None) -> "BoundProgram":
+        """Graph-bound callable — the uniform calling convention.
+
+        `prog.bind(g)(**params)` works identically on every backend: the
+        local/pallas backends resolve the graph's derived views through its
+        `GraphContext` (warming them at bind time), and the distributed
+        backend folds in the mesh / partition / `dist_meta` plumbing that
+        previously had to go through `repro.core.dist.run` by hand
+        (`mesh=None` → one shard per local device)."""
+        return BoundProgram(self, g, mesh=mesh)
+
+
+class BoundProgram:
+    """A `CompiledProgram` bound to one graph (`prog.bind(g)`).
+
+    Holds the graph strongly (a bound program keeps its graph alive) and
+    warms the per-graph structures once at construction, so every
+    subsequent call is pure execution. For the distributed backend the
+    shard_map-wrapped jitted runner is also built once per parameter
+    signature and cached here."""
+
+    def __init__(self, program: CompiledProgram, graph, *, mesh=None):
+        self.program = program
+        self.graph = graph
+        ctx = get_context(graph)
+        if program.backend == "distributed":
+            from . import dist, runtime_dist as rtd
+            self.mesh = mesh if mesh is not None else dist.make_mesh_1d()
+            meta = program.dist_meta or {}
+            self._gd = ctx.dist_arrays(self.mesh.shape[rtd.AXIS],
+                                       ell=meta.get("needs_ell", False))
+        else:
+            if mesh is not None:
+                raise ValueError(
+                    "mesh= applies to the distributed backend only (this "
+                    f"program's backend is {program.backend!r})")
+            self.mesh = None
+            if program.backend == "pallas":
+                ctx.sliced_ell(program.schedule, reverse=True)
+
+    def __call__(self, **params):
+        prog = self.program
+        if prog.backend != "distributed":
+            return prog.fn(self.graph, **params)
+        from . import dist
+        return dist.run_prepared(prog, self._gd, self.mesh,
+                                 num_nodes=self.graph.num_nodes, **params)
+
+    def __repr__(self):
+        g = self.graph
+        return (f"BoundProgram({self.program.name!r}, "
+                f"backend={self.program.backend!r}, N={g.num_nodes}, "
+                f"E={g.num_edges})")
 
 
 def _exec_generated(src: str, fn_name: str, extra_env: Optional[dict] = None):
@@ -49,25 +120,67 @@ def _exec_generated(src: str, fn_name: str, extra_env: Optional[dict] = None):
     return env[fn_name]
 
 
-def compile_program(source: str, backend: str = "local", fn_name: Optional[str] = None,
-                    jit: bool = True, **backend_opts) -> CompiledProgram:
-    prog = parse(source)
-    irfns = lower(prog)
+# compile cache: (source digest, backend, schedule, fn_name, jit) -> program
+_COMPILE_CACHE: dict = {}
+
+
+def compile_cache_clear() -> None:
+    _COMPILE_CACHE.clear()
+
+
+def compile_cache_size() -> int:
+    return len(_COMPILE_CACHE)
+
+
+def compile_program(source: str, backend: str = "local",
+                    fn_name: Optional[str] = None, jit: bool = True,
+                    schedule: Optional[Schedule] = None,
+                    batch_sources: Optional[int] = None,
+                    **backend_opts) -> CompiledProgram:
+    """Compile a StarPlat program under an explicit `Schedule`.
+
+    `schedule=None` snapshots the deprecated `ENGINE` shim (the default
+    `Schedule` unless someone mutated it); `batch_sources=` is the legacy
+    per-compile override, folded into the schedule. Every engine knob is
+    baked into the generated source as a literal, so the same schedule
+    yields byte-identical source and mutating `ENGINE` afterwards never
+    changes an already-compiled program. Results are memoized — repeated
+    identical calls return the same `CompiledProgram` object (unknown
+    `backend_opts` bypass the cache)."""
+    sched = resolve_schedule(schedule, batch_sources=batch_sources)
+    cache_key = None
+    if not backend_opts:
+        digest = hashlib.sha256(source.encode()).hexdigest()
+        cache_key = (digest, backend, sched, fn_name, jit)
+        cached = _COMPILE_CACHE.get(cache_key)
+        if cached is not None:
+            return cached
+
+    prog_ast = parse(source)
+    irfns = lower(prog_ast)
     if fn_name is None:
         irfn = irfns[0]
     else:
-        irfn = next(f for f in irfns if f.name == fn_name)
+        matches = [f for f in irfns if f.name == fn_name]
+        if not matches:
+            defined = ", ".join(f.name for f in irfns) or "<none>"
+            raise ValueError(
+                f"program defines no function named {fn_name!r}; it "
+                f"defines: {defined}")
+        irfn = matches[0]
 
     if backend == "local":
         from .codegen.local_jax import generate_local
-        body = generate_local(irfn, **backend_opts)
+        body = generate_local(irfn, schedule=sched, **backend_opts)
         extra_env = None
     elif backend == "distributed":
         from .codegen.distributed import generate_distributed
-        body, extra_env = generate_distributed(irfn, **backend_opts)
+        body, extra_env = generate_distributed(irfn, schedule=sched,
+                                               **backend_opts)
     elif backend == "pallas":
         from .codegen.pallas_backend import generate_pallas
-        body, extra_env = generate_pallas(irfn, **backend_opts)
+        body, extra_env = generate_pallas(irfn, schedule=sched,
+                                          **backend_opts)
     else:
         raise ValueError(f"unknown backend {backend!r}")
 
@@ -76,40 +189,40 @@ def compile_program(source: str, backend: str = "local", fn_name: Optional[str] 
     # CSRGraph is a registered pytree with static num_nodes/num_edges metadata,
     # so the graph argument is dynamic (arrays) + static (sizes) automatically.
     if backend == "pallas":
-        from ..kernels.ell_spmv.ops import prepare_sliced_ell
         jitted = jax.jit(raw) if jit else raw
-        # Per-graph ELL cache. Entries hold a WEAK reference to the graph:
-        # `id(g)` alone is unsafe (ids are reused after GC, so a dead graph
-        # could alias a new one's sliced view) and keeping `g` strongly would
-        # leak every graph ever run. The weakref callback evicts the entry
-        # the moment the graph is collected, so the dict cannot grow
-        # unboundedly, and the `ref() is g` check guards against id reuse in
-        # the window before the callback fires.
-        _ell_cache = {}
 
-        def fn(g, **kw):
-            key = id(g)
-            entry = _ell_cache.get(key)
-            if entry is None or entry[0]() is not g:
-                # degree-bucketed reverse (in-edge) view, built once per graph
-                ref = weakref.ref(g, lambda _r, _k=key: _ell_cache.pop(_k, None))
-                _ell_cache[key] = entry = (ref, prepare_sliced_ell(g, reverse=True))
-            _, ell = entry
-            return jitted(g, ell, **kw)
-
-        fn._ell_cache = _ell_cache   # introspection hook (tests)
+        def fn(g, *, _jitted=jitted, _sched=sched, **kw):
+            # degree-bucketed reverse (in-edge) view, owned by the graph's
+            # shared GraphContext — built once per (graph, layout), shared
+            # with every other program compiled under the same layout.
+            ell = get_context(g).sliced_ell(_sched, reverse=True)
+            return _jitted(g, ell, **kw)
     else:
         fn = jax.jit(raw) if jit and backend == "local" else raw
-    prog = CompiledProgram(name=irfn.name, backend=backend, source=src,
-                           fn=fn, raw_fn=raw, ir=irfn)
-    if extra_env and "__dist_meta__" in extra_env:
-        prog.dist_meta = extra_env["__dist_meta__"]
+    prog = CompiledProgram(
+        name=irfn.name, backend=backend, source=src, fn=fn, raw_fn=raw,
+        ir=irfn, schedule=sched,
+        dist_meta=(extra_env or {}).get("__dist_meta__"))
+    if cache_key is not None:
+        _COMPILE_CACHE[cache_key] = prog
     return prog
 
 
+def bundled_programs() -> list:
+    """Names of the bundled paper programs (`.sp` sources)."""
+    return sorted(p[:-3] for p in os.listdir(_PROGRAM_DIR)
+                  if p.endswith(".sp"))
+
+
 def load_program_source(name: str) -> str:
-    """Bundled paper programs: sssp, sssp_pull, pr, tc, bc."""
-    with open(os.path.join(_PROGRAM_DIR, f"{name}.sp")) as f:
+    """Source text of a bundled paper program (sssp, sssp_pull, pr, tc, bc,
+    cc); raises `ValueError` naming the bundled programs otherwise."""
+    path = os.path.join(_PROGRAM_DIR, f"{name}.sp")
+    if not os.path.exists(path):
+        raise ValueError(
+            f"no bundled program named {name!r}; bundled programs: "
+            f"{', '.join(bundled_programs())}")
+    with open(path) as f:
         return f.read()
 
 

@@ -2,7 +2,10 @@
 
 Backends emit real Python/JAX *source text* (the paper's compiler is
 source-to-source; so is this one — the generated module is inspectable via
-`CompiledProgram.source`). The vectorization model:
+`CompiledProgram.source`). Every engine knob a backend consults comes from
+the compiled `Schedule` and is emitted as a literal into that text — the
+generated program never reads mutable global state, so one schedule means
+one byte-identical source. The vectorization model:
 
   host ctx    : scalars are 0-d jnp values, properties are [N] arrays
   vertex ctx  : `forall(v in g.nodes())` — statements become whole-array ops;
@@ -19,7 +22,6 @@ source-to-source; so is this one — the generated module is inspectable via
 """
 from __future__ import annotations
 
-import dataclasses
 from dataclasses import dataclass, field
 from typing import List, Optional
 
@@ -118,9 +120,9 @@ class BFSCtx:
 @dataclass
 class BatchInfo:
     """Active batched source-set region (`forall(src in sourceSet)` with
-    `ENGINE.batch_sources > 1`): per-source vertex state is [B, N] — row b is
-    source b's view — and the fields below are the generated-code names the
-    emitters use to index into the batch."""
+    `Schedule.batch_sources > 1`): per-source vertex state is [B, N] — row b
+    is source b's view — and the fields below are the generated-code names
+    the emitters use to index into the batch."""
 
     size: str                    # py expr: static chunk width (python int)
     lane: str                    # py expr: int32[B] = arange(B)

@@ -16,12 +16,10 @@ it in `jax.shard_map` over the mesh's 'data' axis.
 """
 from __future__ import annotations
 
-import dataclasses
-
 from .. import ir as I
 from ..ir import read_props
 from .base import BFSCtx, CodegenError, EdgeCtx, ExprEmitter, HostCtx, VertexCtx
-from .local_jax import LocalCodegen, _JNP_DTYPE
+from .local_jax import LocalCodegen
 
 _PARTITIONED_KEYS = ["esrc", "edst", "ew", "evalid", "esrc_local",
                      "idst", "isrc", "iw", "ivalid", "idst_local", "own_ids"]
@@ -71,8 +69,8 @@ class DistCodegen(LocalCodegen):
     # batching of the local/pallas backends does not apply
     supports_source_batching = False
 
-    def __init__(self, irfn: I.IRFunction):
-        super().__init__(irfn)
+    def __init__(self, irfn: I.IRFunction, schedule=None):
+        super().__init__(irfn, schedule=schedule)
         self.ex = DistExprEmitter(irfn, graph_var=irfn.graph_param)
         self.needs_ell = False
 
@@ -359,8 +357,10 @@ class DistCodegen(LocalCodegen):
         return True
 
 
-def generate_distributed(irfn: I.IRFunction, **opts):
-    cg = DistCodegen(irfn)
+def generate_distributed(irfn: I.IRFunction, schedule=None, **opts):
+    # the schedule is accepted for API uniformity; the BSP lowering has no
+    # frontier/batching knobs yet (properties are device-sharded [B]-blocks)
+    cg = DistCodegen(irfn, schedule=schedule)
     body = cg.generate()
     from .. import runtime_dist as rtd
     meta = {

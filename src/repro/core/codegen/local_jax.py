@@ -12,7 +12,8 @@ from __future__ import annotations
 from typing import List, Optional
 
 from .. import ir as I
-from ...graph.csr import ENGINE
+from ...graph.csr import resolve_schedule
+from ...schedule import Schedule
 from ..ir import written_vars
 from .base import (BatchInfo, BFSCtx, CodegenError, EdgeCtx, Emitter,
                    ExprEmitter, HostCtx, VertexCtx, ctx_chain,
@@ -28,11 +29,12 @@ _RED = {"+": "+", "-": "-", "*": "*", "/": "/", "&&": "&", "||": "|"}
 class LocalCodegen:
     backend_name = "local"
     VLEN = "N"
-    # batched `forall(src in sourceSet)` lowering (ENGINE.batch_sources);
+    # batched `forall(src in sourceSet)` lowering (Schedule.batch_sources);
     # the distributed backend opts out (its properties are device-sharded)
     supports_source_batching = True
 
-    def __init__(self, irfn: I.IRFunction, batch_sources: Optional[int] = None):
+    def __init__(self, irfn: I.IRFunction, schedule: Optional[Schedule] = None,
+                 batch_sources: Optional[int] = None):
         self.f = irfn
         self.em = Emitter()
         self.ex = ExprEmitter(irfn, graph_var=irfn.graph_param)
@@ -40,7 +42,16 @@ class LocalCodegen:
         self.dtypes = {}
         self.write_alias = {}              # fixedPoint redirects
         self.batch = None                  # active BatchInfo (batched set loop)
-        self.batch_sources = batch_sources # None -> read ENGINE at emit time
+        # every engine knob is baked into the emitted source as a literal:
+        # same Schedule -> byte-identical source, and nothing generated ever
+        # reads the deprecated ENGINE singleton at run time
+        self.schedule = resolve_schedule(schedule, batch_sources=batch_sources)
+
+    def _engine_kwargs(self) -> str:
+        """`, threshold_frac=..., direction=...` literals for runtime calls."""
+        s = self.schedule
+        return (f", threshold_frac={s.push_threshold_frac!r}"
+                f", direction={s.direction!r}")
 
     # ------------------------------------------------------------------ utils
     def dtype_of(self, name: str) -> Optional[str]:
@@ -467,24 +478,36 @@ class LocalCodegen:
     def emit_relax_hybrid(self, s: I.IMinMaxUpdate, frontier):
         """Direction-optimized relax step: push (scatter-min from frontier
         sources) vs pull (segment-min over in-edges), switched on-device by
-        frontier occupancy. Both branches compute the identical relaxation.
-        Emitted inline (not as a call to rt.relax_minplus_hybrid, which is
-        the same computation — keep in sync) so the generated source shows
-        the full lowering, per the paper's source-to-source design."""
+        frontier occupancy — or pinned by `Schedule.direction`; both
+        branches compute the identical relaxation, so pinning never changes
+        results. The occupancy threshold is emitted as a literal from the
+        compiled schedule. Emitted inline (not as a call to
+        rt.relax_minplus_hybrid, which is the same computation — keep in
+        sync) so the generated source shows the full lowering, per the
+        paper's source-to-source design."""
         em = self.em
         g = self.f.graph_param
+        sched = self.schedule
         new = em.uid("new")
         if frontier is None:
             em.w(f"{new} = rt.relax_minplus_hybrid({g}, {s.prop}, None)")
             return new
         push, pull = em.uid("push"), em.uid("pull")
-        em.w(f"{push} = lambda _d: rt.scatter_min(_d, {g}.indices, "
-             f"jnp.where({frontier}[{g}.edge_src], _d[{g}.edge_src] + {g}.weights, rt.INF))")
-        em.w(f"{pull} = lambda _d: jnp.minimum(_d, rt.segment_min("
-             f"jnp.where({frontier}[{g}.rev_indices], _d[{g}.rev_indices] + {g}.rev_weights, rt.INF), "
-             f"{g}.rev_edge_dst, {self.VLEN}))")
-        em.w(f"{new} = jax.lax.cond(rt.frontier_should_push({frontier}, {self.VLEN}), "
-             f"{push}, {pull}, {s.prop})")
+        if sched.direction != "pull":
+            em.w(f"{push} = lambda _d: rt.scatter_min(_d, {g}.indices, "
+                 f"jnp.where({frontier}[{g}.edge_src], _d[{g}.edge_src] + {g}.weights, rt.INF))")
+        if sched.direction != "push":
+            em.w(f"{pull} = lambda _d: jnp.minimum(_d, rt.segment_min("
+                 f"jnp.where({frontier}[{g}.rev_indices], _d[{g}.rev_indices] + {g}.rev_weights, rt.INF), "
+                 f"{g}.rev_edge_dst, {self.VLEN}))")
+        if sched.direction == "push":
+            em.w(f"{new} = {push}({s.prop})")
+        elif sched.direction == "pull":
+            em.w(f"{new} = {pull}({s.prop})")
+        else:
+            em.w(f"{new} = jax.lax.cond(rt.frontier_should_push({frontier}, "
+                 f"{self.VLEN}, {sched.push_threshold_frac!r}), "
+                 f"{push}, {pull}, {s.prop})")
         return new
 
     def s_IMinMaxUpdate(self, s: I.IMinMaxUpdate, ctx):
@@ -637,8 +660,7 @@ class LocalCodegen:
         em.w(f"({pack},) = _state" if len(carry) == 1 else f"({pack}) = _state")
 
     def s_ISetLoop(self, s: I.ISetLoop, ctx):
-        bs = (ENGINE.batch_sources if self.batch_sources is None
-              else self.batch_sources)
+        bs = self.schedule.batch_sources
         if self.supports_source_batching and self.batch is None and bs and bs > 1:
             state = self._snapshot()
             try:
@@ -725,10 +747,12 @@ class LocalCodegen:
                                    "set iterator")
             # one batched BFS: level[b] == bfs_levels(g, srcs[b]); depth is
             # the deepest lane's count — shallower lanes see empty frontiers
-            em.w(f"{lvl}, {dep} = rt.bfs_levels_batch({g}, {self.batch.srcs})")
+            em.w(f"{lvl}, {dep} = rt.bfs_levels_batch({g}, {self.batch.srcs}"
+                 f"{self._engine_kwargs()})")
             self.batch.arrays.add(lvl)
         else:
-            em.w(f"{lvl}, {dep} = rt.bfs_levels({g}, {root})")
+            em.w(f"{lvl}, {dep} = rt.bfs_levels({g}, {root}"
+                 f"{self._engine_kwargs()})")
         # forward pass: level-synchronous over the BFS DAG
         carry = self.carries(s.body)
         pack = ", ".join(carry)
@@ -790,7 +814,11 @@ def s_target_source(s: I.IAssignProp, ectx) -> str:
     return ectx.source
 
 
-def generate_local(irfn: I.IRFunction, batch_sources: Optional[int] = None) -> str:
-    """`batch_sources=None` reads `ENGINE.batch_sources` at generation time;
-    pass an int (0/1 = off) to pin the source-batch width per program."""
-    return LocalCodegen(irfn, batch_sources=batch_sources).generate()
+def generate_local(irfn: I.IRFunction, schedule: Optional[Schedule] = None,
+                   batch_sources: Optional[int] = None) -> str:
+    """Emit the local-backend source under `schedule` (default: the ENGINE
+    shim's snapshot). Every knob is baked in as a literal — the same
+    schedule yields byte-identical source. `batch_sources` is the legacy
+    per-program override (0/1 = sequential set loops)."""
+    return LocalCodegen(irfn, schedule=schedule,
+                        batch_sources=batch_sources).generate()

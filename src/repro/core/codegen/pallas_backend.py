@@ -24,8 +24,8 @@ already fuses well; the kernels own the compute-dense inner loops.
 from __future__ import annotations
 
 from .. import ir as I
-from .base import CodegenError, EdgeCtx, HostCtx, VertexCtx
-from .local_jax import LocalCodegen, _RED
+from .base import HostCtx, VertexCtx
+from .local_jax import LocalCodegen
 
 
 def _only_reads_side(expr, side: str) -> bool:
@@ -84,12 +84,14 @@ class PallasCodegen(LocalCodegen):
         """Same pattern the local backend detects, lowered to the kernel op:
         per-bucket pull kernels over the reverse sliced-ELL view, or
         scatter-push over the CSR edge arrays when the frontier is sparse
-        (the op owns the on-device occupancy switch)."""
+        (the op owns the on-device occupancy switch). The compiled
+        schedule's threshold/direction are baked in as literals."""
         em = self.em
         g = self.f.graph_param
         new = em.uid("new")
         fr = frontier or "None"
-        em.w(f"{new} = kops.relax_minplus(_ell, {s.prop}, frontier={fr}, csr={g})")
+        em.w(f"{new} = kops.relax_minplus(_ell, {s.prop}, frontier={fr}, "
+             f"csr={g}{self._engine_kwargs()})")
         return new
 
     # ---- hot pattern 2: neighborhood sum → sliced-ELL (+,×) kernel -----------
@@ -109,8 +111,9 @@ class PallasCodegen(LocalCodegen):
         super().s_IAssign(s, ctx)
 
 
-def generate_pallas(irfn: I.IRFunction, batch_sources=None, **opts):
-    cg = PallasCodegen(irfn, batch_sources=batch_sources)
+def generate_pallas(irfn: I.IRFunction, schedule=None, batch_sources=None,
+                    **opts):
+    cg = PallasCodegen(irfn, schedule=schedule, batch_sources=batch_sources)
     body = cg.generate()
     from ...kernels.ell_spmv import ops as kops
     return body, {"kops": kops}

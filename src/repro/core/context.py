@@ -1,0 +1,167 @@
+"""GraphContext: the per-graph registry of derived execution structures.
+
+Every backend wants something built from a `CSRGraph` once and reused
+across calls — the pallas backend its degree-bucketed sliced-ELL views
+(forward or reverse, including the COO hub tail), the distributed backend
+its 1-D partitioned device arrays, benchmarks the dense padded ELL view.
+Before this module each consumer kept its own cache (the pallas codegen
+hid one inside every compiled program's closure); now all derived state
+for a graph lives in ONE `GraphContext`, found through a weakref-keyed
+module registry:
+
+    ctx = get_context(g)                 # registered on first touch
+    ell = ctx.sliced_ell(schedule)       # built once per (layout, reverse)
+    gd  = ctx.dist_arrays(num_shards)    # built once per partitioning
+
+Entries hold a WEAK reference to the graph: `id(g)` alone is unsafe (ids
+are reused after GC, so a dead graph could alias a new one's views) and a
+strong reference would leak every graph ever run. The weakref callback
+evicts the entry the moment the graph is collected, and the `ref() is g`
+check guards the window before the callback fires.
+
+`prepare(g, schedule)` is the explicit warm-up entry point: call it before
+serving traffic so the first query does not pay the host-side view build.
+"""
+from __future__ import annotations
+
+import weakref
+from typing import Optional
+
+from ..graph.csr import (CSRGraph, pad_nodes, resolve_schedule, to_ell,
+                         to_sliced_ell)
+from ..schedule import Schedule
+
+
+class GraphContext:
+    """Owns every derived structure of one graph, keyed by (kind, layout).
+
+    Views are built lazily and memoized; two schedules that share a
+    `layout_key()` (same bucket structure) share the same sliced view, and
+    all programs compiled against the graph share this one context."""
+
+    __slots__ = ("_graph_ref", "_views")
+
+    def __init__(self, graph: CSRGraph):
+        self._graph_ref = weakref.ref(graph)
+        self._views: dict = {}
+
+    @property
+    def graph(self) -> CSRGraph:
+        g = self._graph_ref()
+        if g is None:
+            raise ReferenceError(
+                "the graph behind this GraphContext was garbage-collected")
+        return g
+
+    def view(self, key, build):
+        """Memoized derived structure: `build(graph)` runs at most once."""
+        v = self._views.get(key)
+        if v is None:
+            v = self._views[key] = build(self.graph)
+        return v
+
+    def view_keys(self) -> list:
+        """The (kind, ...) keys of every view built so far (introspection)."""
+        return sorted(self._views, key=repr)
+
+    # ---- the derived structures ------------------------------------------
+    def sliced_ell(self, schedule: Optional[Schedule] = None, *,
+                   reverse: bool = True):
+        """Degree-bucketed sliced-ELL view (+ COO hub tail). `reverse=True`
+        is the pull orientation the engine relaxes/gathers over."""
+        sched = resolve_schedule(schedule)
+        key = ("sliced_ell", bool(reverse), sched.layout_key())
+        return self.view(key, lambda g: to_sliced_ell(
+            g, reverse=reverse, schedule=sched))
+
+    def ell(self, *, reverse: bool = False):
+        """Dense padded `[N, max_deg]` ELL view (benchmark baseline)."""
+        return self.view(("ell", bool(reverse)),
+                         lambda g: to_ell(g, reverse=reverse))
+
+    def padded(self, multiple: int) -> CSRGraph:
+        """Node-count-padded copy of the graph (device-shard alignment)."""
+        return self.view(("padded", int(multiple)),
+                         lambda g: pad_nodes(g, multiple))
+
+    def dist_arrays(self, num_shards: int, *, ell: bool = False) -> dict:
+        """1-D block-partitioned device arrays for the distributed backend."""
+        from . import runtime_dist as rtd
+        key = ("dist_1d", int(num_shards), bool(ell))
+        return self.view(key, lambda g: rtd.prepare_graph_1d(
+            g, num_shards, ell=ell))
+
+
+# --------------------------------------------------------------------------
+# registry
+# --------------------------------------------------------------------------
+
+_REGISTRY: dict = {}   # id(graph) -> (weakref(graph), GraphContext)
+
+
+def get_context(g: CSRGraph) -> GraphContext:
+    """The graph's `GraphContext`, creating (and registering) it on first
+    touch. Cheap enough to call per query: one dict probe + one weakref
+    deref on the hot path."""
+    key = id(g)
+    entry = _REGISTRY.get(key)
+    if entry is None or entry[0]() is not g:
+        ref = weakref.ref(g, lambda _r, _k=key: _REGISTRY.pop(_k, None))
+        _REGISTRY[key] = entry = (ref, GraphContext(g))
+    return entry[1]
+
+
+def contains(g: CSRGraph) -> bool:
+    """True if `g` currently has a live registered context."""
+    entry = _REGISTRY.get(id(g))
+    return entry is not None and entry[0]() is g
+
+
+def registry_size() -> int:
+    return len(_REGISTRY)
+
+
+def clear() -> None:
+    """Drop every registered context (tests / memory pressure)."""
+    _REGISTRY.clear()
+
+
+def prepare(g: CSRGraph, schedule: Optional[Schedule] = None, *,
+            backend: str = "pallas", mesh=None, program=None) -> GraphContext:
+    """Explicit warm-up: build the derived structures `backend` needs so the
+    first query served against `g` pays no host-side view construction.
+
+    * ``pallas`` — the reverse sliced-ELL view for `schedule`'s layout;
+    * ``distributed`` — the 1-D partition for `mesh` (default: one shard
+      per local device); pass `program=` so programs whose generated body
+      needs the replicated ELL view (`dist_meta["needs_ell"]`, e.g. TC)
+      warm the exact partition `bind` will request;
+    * ``local`` — nothing derived (the CSR arrays ARE the layout); the
+      context is still registered so `bind` is uniform.
+
+    `program=` also supplies the schedule/backend defaults:
+    `prepare(g, program=prog)` warms precisely what `prog.bind(g)` needs.
+
+    Returns the graph's `GraphContext` (the same object every consumer of
+    `g` sees). Idempotent and cheap when already warm."""
+    if program is not None:
+        if schedule is None:
+            schedule = getattr(program, "schedule", None)
+        backend = getattr(program, "backend", backend)
+    sched = resolve_schedule(schedule)
+    ctx = get_context(g)
+    if backend == "pallas":
+        ctx.sliced_ell(sched, reverse=True)
+    elif backend == "distributed":
+        from . import runtime_dist as rtd
+        if mesh is None:
+            from .dist import make_mesh_1d
+            mesh = make_mesh_1d()
+        meta = (getattr(program, "dist_meta", None) or {})
+        ctx.dist_arrays(mesh.shape[rtd.AXIS],
+                        ell=meta.get("needs_ell", False))
+    elif backend != "local":
+        raise ValueError(
+            f"unknown backend {backend!r}; expected 'local', 'pallas', or "
+            "'distributed'")
+    return ctx

@@ -6,8 +6,6 @@
 """
 from __future__ import annotations
 
-from functools import partial
-
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -24,14 +22,19 @@ def make_mesh_1d(num_devices: int | None = None):
 
 
 def prepare(g: CSRGraph, mesh, *, ell: bool = False) -> dict:
-    num = mesh.shape[rtd.AXIS]
-    return rtd.prepare_graph_1d(g, num, ell=ell)
+    """Partitioned device arrays for `g`, memoized in the graph's shared
+    `GraphContext` — repeated runs against one graph partition it once."""
+    from .context import get_context
+    return get_context(g).dist_arrays(mesh.shape[rtd.AXIS], ell=ell)
 
 
 def run(prog, g: CSRGraph, mesh, **params):
     """Partition `g`, shard_map the generated body, return global results
-    (property arrays trimmed to the true vertex count)."""
-    meta = getattr(prog, "dist_meta", {})
+    (property arrays trimmed to the true vertex count).
+
+    Equivalent to `prog.bind(g, mesh=mesh)(**params)` — prefer `bind` for
+    repeated queries against one graph."""
+    meta = getattr(prog, "dist_meta", None) or {}
     gd = prepare(g, mesh, ell=meta.get("needs_ell", False))
     return run_prepared(prog, gd, mesh, num_nodes=g.num_nodes, **params)
 
@@ -44,7 +47,7 @@ def run_pod_parallel(prog, g: CSRGraph, mesh, source_set, **params):
     distributed program over its 'data' axis for its source subset; the
     centrality contributions are psum'd across pods at the end. Inter-pod
     traffic = one psum of the output — the DCI-friendly schedule."""
-    meta = getattr(prog, "dist_meta", {})
+    meta = getattr(prog, "dist_meta", None) or {}
     gd = prepare(g, mesh, ell=meta.get("needs_ell", False))
     in_specs = rtd.partition_specs(gd, mesh)          # 'data' only → pod-replicated
     npods = mesh.shape["pod"]
@@ -77,23 +80,43 @@ def run_pod_parallel(prog, g: CSRGraph, mesh, source_set, **params):
 
 
 def run_prepared(prog, gd: dict, mesh, *, num_nodes: int | None = None, **params):
-    meta = getattr(prog, "dist_meta", {})
-    in_specs = rtd.partition_specs(gd, mesh)
-    names = [n for n, v in params.items() if v is not None]
+    meta = getattr(prog, "dist_meta", None) or {}
+    names = tuple(n for n, v in params.items() if v is not None)
     vals = tuple(params[n] for n in names)
-
-    out_specs = {v: P(rtd.AXIS) for v in meta.get("out_props", [])}
-    out_specs.update({v: P() for v in meta.get("out_scalars", [])})
-
-    body = prog.raw_fn
-    fn = jax.jit(rtd.shard_map(
-        lambda gd_, *vs: body(gd_, **dict(zip(names, vs))),
-        mesh=mesh,
-        in_specs=(in_specs,) + tuple(P() for _ in vals),
-        out_specs=out_specs,
-    ))
+    fn = _runner(prog, gd, mesh, names, meta)
     out = fn(gd, *vals)
     if num_nodes is not None:
         out = {k: (v[:num_nodes] if k in meta.get("out_props", ()) else v)
                for k, v in out.items()}
     return out
+
+
+def _runner(prog, gd: dict, mesh, names: tuple, meta: dict):
+    """The jitted shard_map wrapper for one (program, mesh, param-signature).
+
+    Built once and cached on the program: `jax.jit` keys its own cache on
+    function identity, so constructing a fresh lambda per call (the old
+    behavior) re-traced and re-compiled on EVERY query — fatal for a query
+    server. `ell_cols` presence is in the key because it changes `gd`'s
+    pytree structure."""
+    cache = getattr(prog, "_dist_runner_cache", None)
+    if cache is None:
+        cache = {}
+        try:
+            prog._dist_runner_cache = cache
+        except AttributeError:   # e.g. a frozen/slots stand-in program
+            pass
+    key = (mesh, names, "ell_cols" in gd)
+    fn = cache.get(key)
+    if fn is None:
+        in_specs = rtd.partition_specs(gd, mesh)
+        out_specs = {v: P(rtd.AXIS) for v in meta.get("out_props", [])}
+        out_specs.update({v: P() for v in meta.get("out_scalars", [])})
+        body = prog.raw_fn
+        fn = cache[key] = jax.jit(rtd.shard_map(
+            lambda gd_, *vs: body(gd_, **dict(zip(names, vs))),
+            mesh=mesh,
+            in_specs=(in_specs,) + tuple(P() for _ in names),
+            out_specs=out_specs,
+        ))
+    return fn

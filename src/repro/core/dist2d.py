@@ -17,15 +17,13 @@ tests/test_dist2d.py; the roofline comparison is EXPERIMENTS.md §Perf-G.
 """
 from __future__ import annotations
 
-from functools import partial
-
 import jax
 import jax.numpy as jnp
 import numpy as np
 from jax.sharding import PartitionSpec as P
 
 from ..graph.csr import CSRGraph, INF_I32
-from ..graph.partition import Partition2D, partition_2d
+from ..graph.partition import partition_2d
 from . import runtime as rt
 from .runtime_dist import shard_map as _shard_map
 

@@ -14,7 +14,7 @@ from typing import List, Optional
 
 from . import ast_nodes as A
 from . import ir as I
-from .semantic import FunctionInfo, SemanticError, analyze
+from .semantic import FunctionInfo, analyze
 
 
 class LowerError(Exception):

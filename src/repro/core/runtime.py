@@ -11,8 +11,6 @@ pull-reductions use sorted segment ops.
 """
 from __future__ import annotations
 
-from functools import partial
-
 import jax
 import jax.numpy as jnp
 
@@ -167,17 +165,25 @@ def frontier_size(frontier: jax.Array) -> jax.Array:
 
 
 def frontier_should_push(frontier: jax.Array, n: int,
-                         threshold_frac: float | None = None) -> jax.Array:
+                         threshold_frac: float | None = None,
+                         direction: str = "auto") -> jax.Array:
     """True when the frontier is sparse enough that push (scatter from the
     few active sources) beats a pull sweep. The knob is
-    `ENGINE.push_threshold_frac` (fraction of N)."""
+    `Schedule.push_threshold_frac` (fraction of N) — generated code passes
+    it explicitly; `None` falls back to the deprecated `ENGINE` shim. A
+    pinned `direction` short-circuits the occupancy test."""
+    if direction == "push":
+        return jnp.bool_(True)
+    if direction == "pull":
+        return jnp.bool_(False)
     frac = ENGINE.push_threshold_frac if threshold_frac is None else threshold_frac
     return frontier_size(frontier) <= jnp.int32(max(int(n * frac), 1))
 
 
 def relax_minplus_hybrid(g: CSRGraph, dist: jax.Array,
                          frontier: jax.Array | None = None,
-                         threshold_frac: float | None = None) -> jax.Array:
+                         threshold_frac: float | None = None,
+                         direction: str = "auto") -> jax.Array:
     """One SSSP/min-plus relaxation restricted to `frontier` sources, with
     push/pull direction chosen on-device.
 
@@ -210,13 +216,19 @@ def relax_minplus_hybrid(g: CSRGraph, dist: jax.Array,
 
     if frontier is None:
         return pull(dist)
+    if direction == "push":
+        return push(dist)
+    if direction == "pull":
+        return pull(dist)
     return jax.lax.cond(frontier_should_push(frontier, n, threshold_frac),
                         push, pull, dist)
 
 
 # --- BFS (iterateInBFS construct) ----------------------------------------------
 
-def bfs_levels(g: CSRGraph, root, max_levels: int | None = None):
+def bfs_levels(g: CSRGraph, root, max_levels: int | None = None, *,
+               threshold_frac: float | None = None,
+               direction: str = "auto"):
     """Level-synchronous BFS with direction-optimizing expansion. Dense
     frontier: level[v] = -1 until visited; frontier = (level == cur).
 
@@ -245,8 +257,14 @@ def bfs_levels(g: CSRGraph, root, max_levels: int | None = None):
             return segment_max(fr[g.rev_indices].astype(jnp.int32),
                                g.rev_edge_dst, n) > 0
 
-        reach = jax.lax.cond(frontier_should_push(frontier, n), push, pull,
-                             frontier)
+        if direction == "push":
+            reach = push(frontier)
+        elif direction == "pull":
+            reach = pull(frontier)
+        else:
+            reach = jax.lax.cond(
+                frontier_should_push(frontier, n, threshold_frac),
+                push, pull, frontier)
         newly = reach & (level < 0)
         level = jnp.where(newly, cur + 1, level)
         return level, cur + 1, jnp.any(newly)
@@ -267,7 +285,9 @@ def bfs_levels(g: CSRGraph, root, max_levels: int | None = None):
 
 def frontier_rows_should_push(frontier: jax.Array, n: int,
                               threshold_frac: float | None = None) -> jax.Array:
-    """Per-row push/pull choice for a [B, N] batched frontier → bool[B]."""
+    """Per-row push/pull choice for a [B, N] batched frontier → bool[B].
+    `None` falls back to the deprecated `ENGINE` shim; generated code
+    always passes the compiled `Schedule`'s threshold explicitly."""
     frac = ENGINE.push_threshold_frac if threshold_frac is None else threshold_frac
     occ = jnp.sum(frontier.astype(jnp.int32), axis=1)
     return occ <= jnp.int32(max(int(n * frac), 1))
@@ -285,7 +305,8 @@ def _cond_by_rows(rows_push, push_all, pull_all, mixed, arg):
 
 def relax_minplus_hybrid_batch(g: CSRGraph, dist: jax.Array,
                                frontier: jax.Array | None = None,
-                               threshold_frac: float | None = None) -> jax.Array:
+                               threshold_frac: float | None = None,
+                               direction: str = "auto") -> jax.Array:
     """Batched SSSP/min-plus relaxation: dist [B, N], frontier [B, N] bool.
 
     Row-for-row identical to `relax_minplus_hybrid` on each dist row with its
@@ -308,6 +329,10 @@ def relax_minplus_hybrid_batch(g: CSRGraph, dist: jax.Array,
 
     if frontier is None:
         return pull(dist, None)
+    if direction == "push":
+        return push(dist, frontier)
+    if direction == "pull":
+        return pull(dist, frontier)
     rows_push = frontier_rows_should_push(frontier, n, threshold_frac)
     return _cond_by_rows(
         rows_push,
@@ -319,7 +344,8 @@ def relax_minplus_hybrid_batch(g: CSRGraph, dist: jax.Array,
 
 
 def bfs_levels_batch(g: CSRGraph, roots: jax.Array,
-                     threshold_frac: float | None = None):
+                     threshold_frac: float | None = None,
+                     direction: str = "auto"):
     """Batched level-synchronous BFS from roots[B] with per-row direction
     optimization. Returns (level int32[B, N], depth) — row b equals
     `bfs_levels(g, roots[b])[0]`; depth is the deepest row's level count, so
@@ -345,11 +371,16 @@ def bfs_levels_batch(g: CSRGraph, roots: jax.Array,
             return segment_max_batch(fr[:, g.rev_indices].astype(jnp.int32),
                                      g.rev_edge_dst, n) > 0
 
-        rows_push = frontier_rows_should_push(frontier, n, threshold_frac)
-        reach = _cond_by_rows(
-            rows_push, push, pull,
-            lambda fr: push(fr & rows_push[:, None]) | pull(fr & ~rows_push[:, None]),
-            frontier)
+        if direction == "push":
+            reach = push(frontier)
+        elif direction == "pull":
+            reach = pull(frontier)
+        else:
+            rows_push = frontier_rows_should_push(frontier, n, threshold_frac)
+            reach = _cond_by_rows(
+                rows_push, push, pull,
+                lambda fr: push(fr & rows_push[:, None]) | pull(fr & ~rows_push[:, None]),
+                frontier)
         newly = reach & (level < 0)
         level = jnp.where(newly, cur + 1, level)
         return level, cur + 1, jnp.any(newly)
@@ -360,7 +391,8 @@ def bfs_levels_batch(g: CSRGraph, roots: jax.Array,
 
 
 def sssp_multi(g: CSRGraph, sources: jax.Array,
-               threshold_frac: float | None = None) -> jax.Array:
+               threshold_frac: float | None = None,
+               direction: str = "auto") -> jax.Array:
     """Multi-query SSSP: one batched fixed point answering B source queries
     per sweep. Returns dist int32[B, N]; row b == SSSP from sources[b]."""
     n = g.num_nodes
@@ -374,7 +406,7 @@ def sssp_multi(g: CSRGraph, sources: jax.Array,
 
     def body(state):
         d, fr = state
-        d2 = relax_minplus_hybrid_batch(g, d, fr, threshold_frac)
+        d2 = relax_minplus_hybrid_batch(g, d, fr, threshold_frac, direction)
         return d2, d2 < d
 
     dist, _ = jax.lax.while_loop(cond, body, (dist0, fr0))

@@ -18,13 +18,11 @@ TPU mesh.
 """
 from __future__ import annotations
 
-from functools import partial
-
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from ..graph.csr import CSRGraph, INF_I32
+from ..graph.csr import CSRGraph
 from ..graph.partition import block_partition_1d
 from . import runtime as rt
 

@@ -1,15 +1,16 @@
+from ..schedule import Schedule
 from .csr import (CSRGraph, EllGraph, ENGINE, EngineConfig, SlicedEllGraph,
-                  from_edges, to_dense, to_ell, to_sliced_ell, pad_nodes,
-                  INF_I32)
+                  from_edges, resolve_schedule, to_dense, to_ell,
+                  to_sliced_ell, pad_nodes, INF_I32)
 from .generators import (uniform_random, rmat, road, small_world,
                          powerlaw_social, preferential_attachment, load_suite,
                          SUITE)
 from . import algorithms_ref, io, partition
 
 __all__ = [
-    "CSRGraph", "EllGraph", "ENGINE", "EngineConfig", "SlicedEllGraph",
-    "from_edges", "to_dense", "to_ell", "to_sliced_ell", "pad_nodes",
-    "INF_I32", "uniform_random", "rmat", "road", "small_world",
-    "powerlaw_social", "preferential_attachment", "load_suite", "SUITE",
-    "algorithms_ref", "io", "partition",
+    "CSRGraph", "EllGraph", "ENGINE", "EngineConfig", "Schedule",
+    "SlicedEllGraph", "from_edges", "resolve_schedule", "to_dense", "to_ell",
+    "to_sliced_ell", "pad_nodes", "INF_I32", "uniform_random", "rmat",
+    "road", "small_world", "powerlaw_social", "preferential_attachment",
+    "load_suite", "SUITE", "algorithms_ref", "io", "partition",
 ]

@@ -10,38 +10,91 @@ so edge-parallel ops are a gather, not a searchsorted.
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
+import warnings
 from typing import Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ..schedule import DEFAULT_SCHEDULE, Schedule
+
 INF_I32 = np.int32(2**30)  # "infinity" that survives + weight without overflow
+
+_ENGINE_DEPRECATION = (
+    "mutating the module-level ENGINE is deprecated; construct an explicit "
+    "repro.schedule.Schedule and pass it to compile_program(..., "
+    "schedule=...) / prepare(g, schedule) instead. ENGINE is snapshotted "
+    "into a Schedule at compile/prepare time, so mutating it afterwards "
+    "never changes an already-compiled program."
+)
 
 
 @dataclasses.dataclass
 class EngineConfig:
-    """Knobs of the frontier-aware, degree-bucketed execution engine.
+    """DEPRECATED mutable shim over the default `Schedule`.
 
-    Mutate `ENGINE` (module-level singleton) before compiling/preparing a
-    graph to retune; see README "Engine knobs".
+    The engine knobs are a per-compile `repro.schedule.Schedule` now; this
+    singleton only exists so pre-Schedule code keeps working. Reads are
+    free; every mutation validates the would-be configuration (the same
+    checks as `Schedule`), emits a `DeprecationWarning`, and only takes
+    effect for *future* compiles/prepares via `snapshot()`. The shim will
+    be removed once nothing in-tree mutates it (see README "Migration").
     """
 
-    num_buckets: int = 4          # degree buckets in the sliced-ELL view
-    min_width: int = 8            # width of the narrowest bucket (VPU lane multiple)
-    growth: int = 4               # geometric width growth between buckets
-    push_threshold_frac: float = 1.0 / 16.0  # frontier occupancy below which
-    # the engine relaxes push-style (scatter) instead of pull (gather/kernel)
-    batch_sources: int = 32       # sources traversed per batched sweep in
-    # `forall(src in sourceSet)` (BC & friends): per-source [N] properties
-    # become [B, N] matrices and every per-bucket SpMV becomes an SpMM with
-    # B lanes. 0 or 1 disables batching (sequential per-source fori_loop).
-    # Working-set tradeoff: each batched chunk materializes B·N property
-    # cells per per-source property.
+    # field defaults come from DEFAULT_SCHEDULE — one source of truth, so
+    # an unmutated shim always snapshots exactly the default Schedule
+    num_buckets: int = DEFAULT_SCHEDULE.num_buckets
+    min_width: int = DEFAULT_SCHEDULE.min_width
+    growth: int = DEFAULT_SCHEDULE.growth
+    push_threshold_frac: float = DEFAULT_SCHEDULE.push_threshold_frac
+    batch_sources: int = DEFAULT_SCHEDULE.batch_sources
+
+    def __post_init__(self):
+        self.snapshot()           # validate the defaults once
+        object.__setattr__(self, "_ready", True)
+
+    def __setattr__(self, name, value):
+        if getattr(self, "_ready", False) and not name.startswith("_"):
+            knobs = {f.name: getattr(self, f.name)
+                     for f in dataclasses.fields(self)}
+            if name not in knobs:
+                raise AttributeError(
+                    f"ENGINE has no knob {name!r}; knobs: "
+                    f"{', '.join(sorted(knobs))}")
+            knobs[name] = value
+            Schedule(**knobs)     # actionable ValueError before committing
+            warnings.warn(_ENGINE_DEPRECATION, DeprecationWarning,
+                          stacklevel=2)
+        object.__setattr__(self, name, value)
+
+    def snapshot(self, *, direction: str = "auto") -> Schedule:
+        """Materialize the current knob values as a frozen `Schedule`."""
+        return Schedule(num_buckets=self.num_buckets,
+                        min_width=self.min_width, growth=self.growth,
+                        push_threshold_frac=self.push_threshold_frac,
+                        batch_sources=self.batch_sources,
+                        direction=direction)
 
 
 ENGINE = EngineConfig()
+
+
+def resolve_schedule(schedule: Optional[Schedule] = None, *,
+                     batch_sources: Optional[int] = None) -> Schedule:
+    """The one place a default schedule is materialized.
+
+    `schedule=None` snapshots the deprecated `ENGINE` shim (which, unless
+    mutated, IS the default `Schedule`); the legacy per-compile
+    `batch_sources=` override folds into the result."""
+    sched = ENGINE.snapshot() if schedule is None else schedule
+    if not isinstance(sched, Schedule):
+        raise TypeError(
+            f"schedule must be a repro.schedule.Schedule, got "
+            f"{type(sched).__name__} — e.g. Schedule(batch_sources=16)")
+    if batch_sources is not None:
+        sched = dataclasses.replace(sched, batch_sources=int(batch_sources))
+    return sched
 
 
 @jax.tree_util.register_dataclass
@@ -239,6 +292,7 @@ def to_sliced_ell(
     g: CSRGraph,
     *,
     reverse: bool = False,
+    schedule: Optional[Schedule] = None,
     num_buckets: Optional[int] = None,
     min_width: Optional[int] = None,
     growth: Optional[int] = None,
@@ -246,11 +300,14 @@ def to_sliced_ell(
 ) -> SlicedEllGraph:
     """Build the degree-bucketed view (host side, once per graph).
 
-    `reverse=True` buckets by in-degree with in-neighbor columns — the pull
-    orientation both backends relax/gather over. Degree-0 rows are dropped
-    entirely (they contribute the semiring identity).
+    The bucket layout comes from `schedule` (default: the `ENGINE` shim's
+    snapshot, i.e. the default `Schedule`); the explicit knob kwargs remain
+    as per-call overrides. `reverse=True` buckets by in-degree with
+    in-neighbor columns — the pull orientation both backends relax/gather
+    over. Degree-0 rows are dropped entirely (they contribute the semiring
+    identity).
     """
-    cfg = ENGINE
+    cfg = resolve_schedule(schedule)
     num_buckets = cfg.num_buckets if num_buckets is None else num_buckets
     min_width = cfg.min_width if min_width is None else min_width
     growth = cfg.growth if growth is None else growth

@@ -63,11 +63,14 @@ def prepare_ell(g: CSRGraph, *, reverse: bool = False, block_rows: int = 256):
     return jnp.asarray(cols), jnp.asarray(wts), block
 
 
-def prepare_sliced_ell(g: CSRGraph, *, reverse: bool = True,
+def prepare_sliced_ell(g: CSRGraph, *, reverse: bool = True, schedule=None,
                        **knobs) -> SlicedEllGraph:
     """Host-side: degree-bucketed view for the frontier-aware engine.
-    Default orientation is reverse (in-edges) — the pull layout."""
-    return to_sliced_ell(g, reverse=reverse, **knobs)
+    Default orientation is reverse (in-edges) — the pull layout. The bucket
+    layout comes from `schedule` (a `repro.schedule.Schedule`). Prefer
+    `repro.core.context.GraphContext.sliced_ell`, which memoizes this per
+    (graph, layout)."""
+    return to_sliced_ell(g, reverse=reverse, schedule=schedule, **knobs)
 
 
 # --------------------------------------------------------------------------
@@ -165,7 +168,8 @@ def _relax_push(g: CSRGraph, dist, frontier):
 
 def relax_minplus(cols_or_ell, wts_or_dist, dist=None, *, frontier=None,
                   csr: CSRGraph | None = None, block_rows: int = 256,
-                  threshold_frac: float | None = None):
+                  threshold_frac: float | None = None,
+                  direction: str = "auto"):
     """One SSSP relax step.
 
     Dense form (baseline): `relax_minplus(cols, wts, dist)` — full pull
@@ -173,10 +177,12 @@ def relax_minplus(cols_or_ell, wts_or_dist, dist=None, *, frontier=None,
 
     Sliced form (engine): `relax_minplus(ell, dist, frontier=fr, csr=g)` —
     frontier-masked, direction-optimized: when the frontier occupancy is
-    under `ENGINE.push_threshold_frac · N` the relax runs push-style over
-    the CSR out-edges (scatter-min), otherwise as per-bucket pull kernels.
-    Both directions compute the identical relaxation, so the on-device
-    `lax.cond` switch never changes results.
+    under `threshold_frac · N` (the compiled `Schedule`'s knob; `None`
+    falls back to the deprecated `ENGINE` shim) the relax runs push-style
+    over the CSR out-edges (scatter-min), otherwise as per-bucket pull
+    kernels. `direction="push"|"pull"` pins one branch. Both directions
+    compute the identical relaxation, so neither the on-device `lax.cond`
+    switch nor a pinned direction ever changes results.
 
     Batched sliced form: dist/frontier [B, N] — the pull sweep becomes a
     per-bucket min-plus SpMM over the [N+1, B] operand, and the push/pull
@@ -192,6 +198,11 @@ def relax_minplus(cols_or_ell, wts_or_dist, dist=None, *, frontier=None,
             "as relax_minplus(ell, dist, frontier=fr, csr=g)")
     ell, dist = cols_or_ell, wts_or_dist
     if frontier is None or csr is None:
+        # dense sweep (or no CSR for push): pull is the only orientation
+        return _relax_sliced_pull(ell, dist, frontier)
+    if direction == "push":
+        return _relax_push(csr, dist, frontier)
+    if direction == "pull":
         return _relax_sliced_pull(ell, dist, frontier)
     from ...core.runtime import (_cond_by_rows, frontier_rows_should_push,
                                  frontier_should_push)

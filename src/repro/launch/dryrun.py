@@ -29,9 +29,8 @@ from ..configs import ARCHS
 from ..configs.base import ShapeCell, shape_cells_for
 from ..models import build
 from ..train import OptimizerConfig, make_train_step
-from ..train.train_step import TrainState, init_state
-from ..train.optimizer import init_opt_state
-from .mesh import batch_axes, effective_batch_axes, make_production_mesh
+from ..train.train_step import init_state
+from .mesh import effective_batch_axes, make_production_mesh
 from . import hlo_cost, roofline
 from . import sharding as sh
 

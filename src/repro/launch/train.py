@@ -20,7 +20,6 @@ import dataclasses
 import time
 
 import jax
-import numpy as np
 
 from ..configs import ARCHS
 from ..models import build

@@ -10,8 +10,6 @@ Implementation selection:
 """
 from __future__ import annotations
 
-from functools import partial
-
 import jax
 import jax.numpy as jnp
 

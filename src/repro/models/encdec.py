@@ -12,7 +12,7 @@ import jax.numpy as jnp
 
 from .attention import (attention_block, attention_decode, attn_init,
                         init_kv_cache)
-from .layers import (dense_init, embed_init, mlp, mlp_init, rmsnorm,
+from .layers import (embed_init, mlp, mlp_init, rmsnorm,
                      rmsnorm_init, stack_layers)
 
 

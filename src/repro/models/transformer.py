@@ -14,9 +14,6 @@ site) every `attn_every` layers via an inner switch.
 """
 from __future__ import annotations
 
-import functools
-from functools import partial
-
 import jax
 import jax.numpy as jnp
 

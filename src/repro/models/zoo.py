@@ -11,8 +11,6 @@ from __future__ import annotations
 import dataclasses
 from typing import Callable
 
-import jax
-import jax.numpy as jnp
 
 from ..configs.base import ModelConfig
 from . import encdec, transformer

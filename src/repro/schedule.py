@@ -1,0 +1,135 @@
+"""Schedule: the explicit, per-compile tuning surface of the engine.
+
+StarPlat's premise is one algorithmic specification lowered to multiple
+backends; GraphIt showed that the *schedule* — how that specification is
+executed — must be a first-class object separate from the algorithm for
+per-program tuning (and autotuning) to work. A `Schedule` captures every
+knob of the frontier-aware, degree-bucketed execution engine as a frozen,
+hashable value:
+
+  * it threads through ``compile_program(source, backend, schedule=...)``
+    into code generation, where the knobs are baked into the generated
+    source as literals (same ``Schedule`` => byte-identical source);
+  * it keys the compile cache, so two programs compiled under different
+    schedules coexist in one process;
+  * its layout fields key the per-graph derived structures owned by
+    ``repro.core.context.GraphContext``.
+
+The old module-level ``repro.graph.ENGINE`` singleton is a deprecated shim
+that materializes a ``Schedule`` via ``ENGINE.snapshot()`` at compile /
+prepare time; mutating it after compile never changes a compiled program.
+
+This module is intentionally dependency-free (no jax, no repro imports) so
+every layer — graph views, runtime, codegen, kernels — can use it.
+"""
+from __future__ import annotations
+
+import dataclasses
+import numbers
+
+# TPU VPU lanes are 8x128; bucket widths (and row padding) must stay a
+# multiple of the sublane count so every bucket tile stays vector-aligned.
+LANE_MULTIPLE = 8
+
+_DIRECTIONS = ("auto", "push", "pull")
+
+
+@dataclasses.dataclass(frozen=True)
+class Schedule:
+    """Frozen engine configuration for one compiled program.
+
+    Fields
+    ------
+    num_buckets:
+        Degree buckets in the sliced-ELL view (>= 1).
+    min_width:
+        Width of the narrowest bucket; a positive multiple of
+        ``LANE_MULTIPLE`` (8) so tiles stay VPU-aligned.
+    growth:
+        Geometric width growth between buckets; an integer > 1.
+    push_threshold_frac:
+        Frontier occupancy (as a fraction of N, in [0, 1]) below which a
+        relax/BFS step runs push-style (scatter from the few active
+        sources) instead of pull (gather/kernel over in-edges). Only
+        consulted when ``direction == "auto"``.
+    batch_sources:
+        Sources traversed per batched chunk in ``forall(src in sourceSet)``
+        (>= 0; 0 or 1 disables batching — sequential per-source loop).
+    direction:
+        Traversal direction policy: ``"auto"`` switches push/pull on-device
+        by frontier occupancy; ``"push"`` / ``"pull"`` pin one direction.
+        Both directions compute the identical relaxation, so pinning never
+        changes results — only the execution schedule.
+    """
+
+    num_buckets: int = 4
+    min_width: int = 8
+    growth: int = 4
+    push_threshold_frac: float = 1.0 / 16.0
+    batch_sources: int = 32
+    direction: str = "auto"
+
+    def __post_init__(self):
+        set_ = lambda k, v: object.__setattr__(self, k, v)  # noqa: E731 (frozen)
+        for name in ("num_buckets", "min_width", "growth", "batch_sources"):
+            v = getattr(self, name)
+            # accept anything integer-valued (numpy ints from autotuning
+            # sweeps, integral floats) but normalize to python int so
+            # equality/hashing — the compile-cache key — stay canonical
+            if isinstance(v, bool):
+                raise ValueError(
+                    f"Schedule.{name} must be an integer, got {v!r}")
+            if isinstance(v, numbers.Integral):
+                set_(name, int(v))
+            elif isinstance(v, float) and v.is_integer():
+                set_(name, int(v))
+            else:
+                raise ValueError(
+                    f"Schedule.{name} must be an integer, got {v!r}")
+        if self.num_buckets < 1:
+            raise ValueError(
+                f"Schedule.num_buckets must be >= 1, got {self.num_buckets} "
+                "(the sliced-ELL view needs at least one degree bucket)")
+        if self.min_width <= 0 or self.min_width % LANE_MULTIPLE:
+            raise ValueError(
+                f"Schedule.min_width must be a positive multiple of "
+                f"{LANE_MULTIPLE} (VPU sublane count), got {self.min_width}")
+        if self.growth <= 1:
+            raise ValueError(
+                f"Schedule.growth must be > 1, got {self.growth} "
+                "(bucket widths grow geometrically; growth 1 would make "
+                "every bucket the same width)")
+        frac = self.push_threshold_frac
+        if isinstance(frac, numbers.Real) and not isinstance(frac, bool):
+            set_("push_threshold_frac", float(frac))
+        if not isinstance(self.push_threshold_frac, float) or \
+                not 0.0 <= self.push_threshold_frac <= 1.0:
+            raise ValueError(
+                "Schedule.push_threshold_frac must be a fraction of N in "
+                f"[0, 1], got {self.push_threshold_frac!r}")
+        if self.batch_sources < 0:
+            raise ValueError(
+                f"Schedule.batch_sources must be >= 0, got "
+                f"{self.batch_sources} (0 or 1 disables source batching)")
+        if self.direction not in _DIRECTIONS:
+            raise ValueError(
+                f"Schedule.direction must be one of {_DIRECTIONS}, got "
+                f"{self.direction!r}")
+
+    # ------------------------------------------------------------------
+    def layout_key(self) -> tuple:
+        """The fields that determine per-graph *data layout* (the sliced-ELL
+        bucket structure). Two schedules sharing a layout_key share the same
+        derived graph views in a GraphContext."""
+        return (self.num_buckets, self.min_width, self.growth)
+
+    def bucket_widths(self) -> tuple:
+        return tuple(self.min_width * self.growth ** i
+                     for i in range(self.num_buckets))
+
+    def replace(self, **changes) -> "Schedule":
+        """Functional update (alias for ``dataclasses.replace``)."""
+        return dataclasses.replace(self, **changes)
+
+
+DEFAULT_SCHEDULE = Schedule()

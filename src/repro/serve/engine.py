@@ -10,7 +10,6 @@ greedy decode continues the batch.
 from __future__ import annotations
 
 import dataclasses
-from typing import List
 
 import jax
 import jax.numpy as jnp

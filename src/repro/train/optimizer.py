@@ -11,8 +11,6 @@ from __future__ import annotations
 
 import dataclasses
 from dataclasses import dataclass
-from functools import partial
-from typing import Callable
 
 import jax
 import jax.numpy as jnp

@@ -11,7 +11,6 @@ never causes retraces.
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
 from typing import Callable
 
 import jax

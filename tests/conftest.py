@@ -4,7 +4,6 @@ import sys
 # tests see ONE device (the dry-run pins 512 in its own process only)
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
-import numpy as np
 import pytest
 
 from repro.graph import road, small_world, uniform_random

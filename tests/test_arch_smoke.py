@@ -3,7 +3,6 @@ REDUCED same-family config, run one forward + one train step on CPU,
 assert output shapes + finiteness; plus a decode step per arch."""
 import jax
 import jax.numpy as jnp
-import numpy as np
 import pytest
 
 from repro.configs import ARCHS

@@ -8,7 +8,6 @@ edge-membership path that replaced the int32 composite key.
 import gc
 import weakref
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
@@ -111,34 +110,45 @@ def test_degenerate_source_sets(backend):
                                    atol=1e-5, err_msg=str(srcs))
 
 
-# --- pallas per-graph ELL cache (weakref regression) --------------------------
+# --- per-graph GraphContext registry (weakref regression) ---------------------
+# These were originally written against the pallas backend's private
+# `fn._ell_cache` closure; the derived views now live in the shared
+# GraphContext registry (repro.core.context), same weakref discipline.
 
-def test_pallas_ell_cache_evicts_on_gc():
+def test_graph_context_evicts_on_gc():
+    from repro.core import context
     prog = compile_bundled("sssp", backend="pallas")
-    cache = prog.fn._ell_cache
     g1 = uniform_random(64, 4, seed=11)
     g2 = uniform_random(72, 4, seed=12)
+    base = context.registry_size()
     prog(g1, src=0)
     prog(g2, src=0)
-    assert len(cache) == 2
+    assert context.contains(g1) and context.contains(g2)
+    assert context.registry_size() == base + 2
     del g1, g2
     gc.collect()
-    assert len(cache) == 0, "dead graphs must not pin their sliced-ELL views"
+    assert context.registry_size() == base, \
+        "dead graphs must not pin their derived views"
 
 
-def test_pallas_ell_cache_survives_id_reuse():
-    """A stale entry under a reused id must be detected (the weakref no
-    longer resolves to the argument) and rebuilt, not served as an alias."""
+def test_graph_context_survives_id_reuse():
+    """A stale registry entry under a reused id must be detected (the
+    weakref no longer resolves to the argument) and rebuilt, not served as
+    an alias of the dead graph's views."""
+    from repro.core import context
+    from repro.core.context import GraphContext
     prog = compile_bundled("sssp", backend="pallas")
-    cache = prog.fn._ell_cache
     g = uniform_random(64, 4, seed=13)
 
     class _Dead:
         pass
 
-    cache[id(g)] = (weakref.ref(_Dead()), "stale-sliced-view")
+    stale = GraphContext(_Dead())
+    context._REGISTRY[id(g)] = (weakref.ref(_Dead()), stale)
+    assert not context.contains(g)
     out = prog(g, src=0)
-    assert cache[id(g)][1] != "stale-sliced-view"
+    assert context.contains(g)
+    assert context._REGISTRY[id(g)][1] is not stale
     ref = compile_bundled("sssp", backend="local")(g, src=0)
     assert np.array_equal(np.asarray(out["dist"]), np.asarray(ref["dist"]))
 

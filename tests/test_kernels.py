@@ -4,7 +4,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.graph import preferential_attachment, small_world, uniform_random
+from repro.graph import preferential_attachment
 from repro.graph.csr import INF_I32
 from repro.kernels.ell_spmv.kernel import ell_spmv
 from repro.kernels.ell_spmv.ops import (gather_plustimes, prepare_ell,

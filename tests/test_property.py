@@ -94,7 +94,6 @@ def test_tc_invariant_under_edge_permutation(g, rnd):
 @given(graphs())
 def test_bfs_levels_valid(g):
     """Every BFS tree edge spans exactly one level; unreached stay -1."""
-    import jax.numpy as jnp
     from repro.core.runtime import bfs_levels
     level, depth = bfs_levels(g, 0)
     level = np.asarray(level)

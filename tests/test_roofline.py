@@ -2,7 +2,6 @@
 sharding spec rules; xla cost_analysis undercount documented."""
 import jax
 import jax.numpy as jnp
-import numpy as np
 import pytest
 
 from repro.launch.hlo_cost import analyze
@@ -107,7 +106,6 @@ def test_divisibility_guard():
 
 def test_model_flops_analytic():
     from repro.configs import ARCHS
-    from repro.configs.base import LM_SHAPES
     cfg = ARCHS["qwen2.5-3b"]
     n = roofline.param_count(cfg)
     assert 2.5e9 < n < 4.0e9            # ~3B params

@@ -1,0 +1,249 @@
+"""Schedule / GraphContext / compile-cache public API (algorithm–schedule
+separation).
+
+Covers: the compile cache (identity on repeated calls, keyed by schedule);
+schedule determinism (same Schedule -> byte-identical generated source);
+schedule coexistence (two programs under different schedules in one
+process, both correct); the deprecated ENGINE shim (snapshot semantics,
+validation, post-compile mutation is inert); knob validation with
+actionable errors; the uniform `prog.bind(g)` calling convention on all
+three backends; and the `prepare` warm-up entry point.
+"""
+import warnings
+
+import numpy as np
+import pytest
+
+from repro.core import (Schedule, compile_bundled, compile_cache_clear,
+                        compile_program, get_context, load_program_source,
+                        prepare)
+from repro.graph import ENGINE, preferential_attachment
+from repro.graph.algorithms_ref import bc_ref, sssp_ref
+
+
+@pytest.fixture(scope="module")
+def g_pl():
+    return preferential_attachment(400, m=5, seed=3)
+
+
+@pytest.fixture()
+def engine_guard():
+    """Snapshot/restore the deprecated ENGINE shim around mutation tests."""
+    saved = ENGINE.snapshot()
+    yield
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        for k in ("num_buckets", "min_width", "growth",
+                  "push_threshold_frac", "batch_sources"):
+            setattr(ENGINE, k, getattr(saved, k))
+
+
+# --- compile cache ------------------------------------------------------------
+
+@pytest.mark.parametrize("backend", ["local", "pallas", "distributed"])
+def test_compile_cache_returns_same_object(backend):
+    a = compile_bundled("sssp", backend=backend)
+    b = compile_bundled("sssp", backend=backend)
+    assert a is b, "identical (source, backend, schedule) must be memoized"
+
+
+def test_compile_cache_keys_on_schedule_and_backend():
+    base = compile_bundled("sssp", backend="local")
+    assert compile_bundled("sssp", backend="pallas") is not base
+    assert compile_bundled("sssp", backend="local",
+                           schedule=Schedule(direction="pull")) is not base
+    assert compile_bundled("sssp", backend="local",
+                           batch_sources=2) is not base
+
+
+def test_same_schedule_byte_identical_source():
+    for backend in ["local", "pallas"]:
+        compile_cache_clear()
+        a = compile_bundled("bc", backend=backend, schedule=Schedule())
+        compile_cache_clear()
+        b = compile_bundled("bc", backend=backend, schedule=Schedule())
+        assert a is not b              # genuinely recompiled...
+        assert a.source == b.source    # ...to byte-identical source
+
+
+# --- schedules coexist --------------------------------------------------------
+
+def test_two_schedules_coexist_and_agree(g_pl):
+    """Push-pinned, pull-pinned, and auto SSSP all in one process: three
+    distinct programs (the schedule is baked into the source), identical
+    results (direction never changes the relaxation)."""
+    ref = sssp_ref(g_pl, 0).astype(np.int32)
+    progs = {d: compile_bundled("sssp", backend="local",
+                                schedule=Schedule(direction=d))
+             for d in ("auto", "push", "pull")}
+    assert len({id(p) for p in progs.values()}) == 3
+    assert len({p.source for p in progs.values()}) == 3
+    for d, p in progs.items():
+        assert np.array_equal(np.asarray(p(g_pl, src=0)["dist"]), ref), d
+
+
+def test_two_layouts_coexist_on_one_graph(g_pl):
+    """Two pallas programs with different bucket layouts share the graph's
+    GraphContext but each gets its own sliced-ELL view."""
+    ref = sssp_ref(g_pl, 0).astype(np.int32)
+    s1, s2 = Schedule(), Schedule(min_width=16, num_buckets=3)
+    p1 = compile_bundled("sssp", backend="pallas", schedule=s1)
+    p2 = compile_bundled("sssp", backend="pallas", schedule=s2)
+    assert np.array_equal(np.asarray(p1(g_pl, src=0)["dist"]), ref)
+    assert np.array_equal(np.asarray(p2(g_pl, src=0)["dist"]), ref)
+    ctx = get_context(g_pl)
+    v1 = ctx.sliced_ell(s1)
+    v2 = ctx.sliced_ell(s2)
+    assert v1 is not v2 and v1.widths != v2.widths
+    assert ctx.sliced_ell(s1) is v1, "views must be memoized per layout"
+
+
+def test_batch_width_is_per_program(g_pl):
+    srcs = np.array([0, 7, 19, 31, 44], np.int32)
+    seq = compile_bundled("bc", backend="local",
+                          schedule=Schedule(batch_sources=0))
+    bat = compile_bundled("bc", backend="local",
+                          schedule=Schedule(batch_sources=4))
+    assert "rt.bfs_levels_batch" in bat.source
+    assert "rt.bfs_levels_batch" not in seq.source
+    np.testing.assert_allclose(np.asarray(bat(g_pl, sourceSet=srcs)["BC"]),
+                               np.asarray(seq(g_pl, sourceSet=srcs)["BC"]),
+                               rtol=1e-4, atol=1e-4)
+
+
+# --- the deprecated ENGINE shim -----------------------------------------------
+
+def test_engine_mutation_after_compile_is_inert(g_pl, engine_guard):
+    """The schedule is snapshotted at compile time; the compiled program
+    must not observe later ENGINE mutation (knobs are source literals)."""
+    prog = compile_bundled("sssp", backend="local")
+    before = np.asarray(prog(g_pl, src=0)["dist"])
+    src_before = prog.source
+    with pytest.warns(DeprecationWarning):
+        ENGINE.push_threshold_frac = 1.0
+    with pytest.warns(DeprecationWarning):
+        ENGINE.batch_sources = 0
+    assert prog.source == src_before
+    assert np.array_equal(np.asarray(prog(g_pl, src=0)["dist"]), before)
+    # ...but a NEW default-schedule compile snapshots the mutated shim
+    fresh = compile_bundled("sssp", backend="local")
+    assert fresh is not prog
+    assert "1.0" in fresh.source
+
+
+def test_engine_shim_validates_before_committing(engine_guard):
+    with pytest.raises(ValueError, match="growth"):
+        ENGINE.growth = 1
+    assert ENGINE.growth != 1, "a rejected mutation must not take effect"
+    with pytest.raises(AttributeError, match="no knob"):
+        ENGINE.bucket_count = 3
+
+
+# --- Schedule validation ------------------------------------------------------
+
+@pytest.mark.parametrize("bad,match", [
+    (dict(num_buckets=0), "num_buckets"),
+    (dict(min_width=0), "min_width"),
+    (dict(min_width=7), "multiple of 8"),
+    (dict(growth=1), "growth"),
+    (dict(push_threshold_frac=1.5), "push_threshold_frac"),
+    (dict(push_threshold_frac=-0.1), "push_threshold_frac"),
+    (dict(batch_sources=-1), "batch_sources"),
+    (dict(direction="sideways"), "direction"),
+])
+def test_schedule_validation_is_actionable(bad, match):
+    with pytest.raises(ValueError, match=match):
+        Schedule(**bad)
+
+
+def test_schedule_is_hashable_and_normalized():
+    assert Schedule(push_threshold_frac=0) == Schedule(push_threshold_frac=0.0)
+    assert hash(Schedule()) == hash(Schedule())
+    assert Schedule().replace(batch_sources=4).batch_sources == 4
+    assert Schedule().bucket_widths() == (8, 32, 128, 512)
+    # numpy scalars (autotuning sweeps) normalize to canonical python values
+    npsched = Schedule(batch_sources=np.int32(8), min_width=np.int64(16),
+                       push_threshold_frac=np.float32(0.25))
+    assert npsched == Schedule(batch_sources=8, min_width=16,
+                               push_threshold_frac=0.25)
+    assert type(npsched.batch_sources) is int
+    with pytest.raises(ValueError, match="integer"):
+        Schedule(batch_sources=True)
+
+
+def test_engine_shim_snapshot_is_default_schedule():
+    assert ENGINE.snapshot() == Schedule(), \
+        "an unmutated shim must materialize exactly the default Schedule"
+
+
+# --- error messages -----------------------------------------------------------
+
+def test_unknown_fn_name_raises_value_error_with_names():
+    with pytest.raises(ValueError, match="Compute_SSSP"):
+        compile_program(load_program_source("sssp"), fn_name="nope")
+
+
+def test_unknown_bundled_program_lists_bundled():
+    with pytest.raises(ValueError, match="sssp_pull"):
+        load_program_source("dijkstra")
+
+
+# --- bind: the uniform calling convention -------------------------------------
+
+@pytest.mark.parametrize("backend", ["local", "pallas", "distributed"])
+def test_bind_uniform_across_backends(backend, g_pl):
+    """`prog.bind(g)(**params)` answers identically on every backend —
+    including distributed, where bind folds in the mesh/partition/dist_meta
+    plumbing (single-shard mesh in-process)."""
+    ref = sssp_ref(g_pl, 0).astype(np.int32)
+    prog = compile_bundled("sssp", backend=backend)
+    bound = prog.bind(g_pl)
+    assert np.array_equal(np.asarray(bound(src=0)["dist"]), ref)
+    # a second query reuses the bound plumbing (partition, jitted runner)
+    assert np.array_equal(np.asarray(bound(src=7)["dist"]),
+                          sssp_ref(g_pl, 7).astype(np.int32))
+
+
+def test_bind_distributed_bc_matches_oracle(g_pl):
+    srcs = np.array([0, 7, 23], np.int32)
+    bound = compile_bundled("bc", backend="distributed").bind(g_pl)
+    np.testing.assert_allclose(np.asarray(bound(sourceSet=srcs)["BC"]),
+                               bc_ref(g_pl, srcs.tolist()), atol=1e-3)
+
+
+def test_bind_rejects_mesh_on_single_device_backends(g_pl):
+    with pytest.raises(ValueError, match="mesh"):
+        compile_bundled("sssp", backend="local").bind(g_pl, mesh=object())
+
+
+# --- prepare (explicit warm-up) -----------------------------------------------
+
+def test_prepare_warms_the_views_bind_reuses(g_pl):
+    sched = Schedule(min_width=24, num_buckets=2)
+    ctx = prepare(g_pl, sched, backend="pallas")
+    assert ctx is get_context(g_pl)
+    view = ctx.sliced_ell(sched)
+    prog = compile_bundled("sssp", backend="pallas", schedule=sched)
+    prog.bind(g_pl)
+    assert ctx.sliced_ell(sched) is view, "bind must reuse the warm view"
+
+
+def test_prepare_unknown_backend():
+    g = preferential_attachment(40, m=2, seed=1)
+    with pytest.raises(ValueError, match="backend"):
+        prepare(g, backend="cuda")
+
+
+def test_prepare_program_warms_needs_ell_partition():
+    """`prepare(g, program=prog)` must warm the exact partition bind will
+    request — including the replicated-ELL variant TC's distributed body
+    needs — not a duplicate ell-less one."""
+    g = preferential_attachment(120, m=3, seed=9)   # fresh, private context
+    prog = compile_bundled("tc", backend="distributed")
+    assert (prog.dist_meta or {}).get("needs_ell")
+    ctx = prepare(g, program=prog)
+    keys = [k for k in ctx.view_keys() if k[0] == "dist_1d"]
+    assert keys and all(k[2] is True for k in keys), keys
+    prog.bind(g)   # must reuse the warm view, not build ell=False too
+    keys = [k for k in ctx.view_keys() if k[0] == "dist_1d"]
+    assert len(keys) == 1
