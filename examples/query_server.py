@@ -18,13 +18,21 @@ per sweep); SSSP requests are served both through the compiled program
 (one query per call) and through the batched engine (`rt.sssp_multi`, B
 queries per sweep) for comparison.
 
-    PYTHONPATH=src python examples/query_server.py [--smoke]
+With `--autotune`, the server tunes the schedule per (program, graph)
+before serving (`repro.autotune`): the tuner sweeps candidate schedules
+derived from the graph's statistics, and `--tune-store PATH` persists the
+result so the next server start skips the sweep entirely (the stored
+record is keyed by source digest + graph fingerprint, so it is re-tuned
+automatically if either changes).
+
+    PYTHONPATH=src python examples/query_server.py [--smoke] [--autotune]
 """
 import argparse
 import time
 
 import numpy as np
 
+from repro.autotune import autotune
 from repro.core import Schedule, compile_bundled, prepare
 from repro.core import runtime as rt
 from repro.graph import preferential_attachment
@@ -38,9 +46,17 @@ def main():
     ap.add_argument("--batch", type=int, default=16, help="sources per batch")
     ap.add_argument("--batches", type=int, default=4, help="batches to serve")
     ap.add_argument("--smoke", action="store_true", help="CI-sized run")
+    ap.add_argument("--autotune", action="store_true",
+                    help="tune the schedule per (program, graph) at startup")
+    ap.add_argument("--tune-budget", type=int, default=8,
+                    help="candidate schedules measured per program")
+    ap.add_argument("--tune-store", default=None, metavar="PATH",
+                    help="persist tuning records; later starts reload "
+                         "instead of re-measuring")
     args = ap.parse_args()
     if args.smoke:
         args.nodes, args.batch, args.batches = 600, 8, 2
+        args.tune_budget = min(args.tune_budget, 4)
 
     sched = Schedule(batch_sources=args.batch)
     g = preferential_attachment(args.nodes, m=6, seed=3)
@@ -61,6 +77,25 @@ def main():
     assert compile_bundled("bc", backend=args.backend, schedule=sched) is bc
     assert compile_bundled("sssp", backend=args.backend, schedule=sched) is sssp
     print("compile cache: repeated requests return the same CompiledProgram")
+
+    if args.autotune:
+        # tune once per (program, graph); with --tune-store the next server
+        # start is a lookup (keyed source digest + graph fingerprint), not
+        # a measurement sweep
+        t0 = time.perf_counter()
+        for name in ("bc", "sssp"):
+            prog = {"bc": bc, "sssp": sssp}[name]
+            res = autotune(prog, g, budget=args.tune_budget, seed=0,
+                           store=args.tune_store)
+            how = ("reloaded from store" if res.from_store
+                   else f"{len(res.record.trials)} trials")
+            print(f"autotune[{name}]: {how}, best {res.speedup:.2f}x vs "
+                  f"compiled schedule -> {res.schedule}")
+            if name == "bc":
+                bc = res.program
+            else:
+                sssp = res.program
+        print(f"autotune total: {time.perf_counter() - t0:.1f} s")
 
     bc_bound = bc.bind(g)
     sssp_bound = sssp.bind(g)

@@ -1,0 +1,450 @@
+"""Schedule autotuner: search the `Schedule` space per (program, graph).
+
+The algorithm/schedule split (``repro.schedule``) makes execution strategy
+an explicit, hashable value — but until now someone still had to *pick*
+the bucket layout, push/pull threshold, batch width, and kernel block
+sizes per graph, and the winning choice is graph-dependent (GraphIt's
+observation, reproduced in ``BENCH_frontier.json``: power-law graphs love
+deep bucket layouts and direction switching, road graphs don't care).
+This module closes the loop:
+
+  1. **Search space** — `search_space(stats)` derives candidate schedules
+     from `Schedule`'s own fields (bucket layouts, `push_threshold_frac`,
+     `direction`, `batch_sources`, per-bucket `block_rows`), pruned by the
+     graph statistics a `GraphContext` computes (`ctx.stats()`: degree
+     skew/CV + a frontier-growth BFS probe), so a power-law and a road
+     graph start from different candidate sets.
+  2. **Measure loop** — each trial recompiles the program under a
+     candidate schedule through the PR-3 compile cache (a repeated trial
+     is a cache hit — across tuning runs too) and times `prog.bind(g)`
+     executions with warm-up, taking the min over repetitions.
+  3. **Persistence** — results land in a `TuningRecord` keyed by
+     ``(source digest, backend, graph fingerprint)`` that round-trips
+     through JSON via `TuningStore`, so a server process tunes once and
+     reloads thereafter; a stored record whose digest or fingerprint no
+     longer matches (the program or the graph changed) is rejected and
+     re-tuned rather than silently replayed.
+
+Entry point::
+
+    from repro.autotune import autotune
+    result = autotune(prog, g, budget=16)        # result.schedule is best
+    tuned  = result.program.bind(g)              # compiled under it
+
+Determinism: given the same graph, seed, and budget, the candidate list,
+trial order, and tie-breaking are all deterministic; with a deterministic
+``measure=`` hook the chosen schedule is exactly reproducible (tested).
+The default (wall-clock) measurement keeps the guarantee that the chosen
+schedule is never *measured-worse* than the baseline, because the
+program's own schedule is always trial #0 and ties break toward the
+earliest trial.
+
+See ``docs/schedule.md`` for the knob reference and perf guidance, and
+``docs/architecture.md`` for where tuning sits in the pipeline.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import json
+import os
+import time
+from typing import Callable, List, Optional, Union
+
+import numpy as np
+
+from .core.api import CompiledProgram
+from .core.context import get_context
+from .schedule import LANE_MULTIPLE, Schedule
+
+RECORD_VERSION = 1
+
+# stats thresholds the pruning branches on (see GraphContext.stats())
+_SKEWED_CV = 0.5          # degree CV above this = power-law-like
+_SKEWED_MAX_RATIO = 4.0   # max_degree / avg_degree above this = hubby
+_FLAT_FRONTIER = 1.0 / 16.0  # peak frontier frac below this = always-sparse
+
+
+def source_digest(source: str) -> str:
+    """Stable 16-hex-char digest of a DSL source text (TuningRecord key)."""
+    return hashlib.sha256(source.encode()).hexdigest()[:16]
+
+
+def schedule_to_dict(s: Schedule) -> dict:
+    return dataclasses.asdict(s)
+
+
+def schedule_from_dict(d: dict) -> Schedule:
+    """Inverse of `schedule_to_dict`, tolerant of JSON round-trips (list →
+    tuple normalization happens in `Schedule.__post_init__`)."""
+    fields = {f.name for f in dataclasses.fields(Schedule)}
+    unknown = set(d) - fields
+    if unknown:
+        raise ValueError(
+            f"unknown Schedule fields in stored record: {sorted(unknown)} "
+            "(the record predates or postdates this Schedule version)")
+    return Schedule(**d)
+
+
+# --------------------------------------------------------------------------
+# search space
+# --------------------------------------------------------------------------
+
+def _round_up(x: int, m: int) -> int:
+    return (x + m - 1) // m * m
+
+
+def _with_layout(base: Schedule, num_buckets: int, min_width: int,
+                 growth: int) -> Schedule:
+    # a per-bucket block_rows tuple is tied to the old bucket count —
+    # collapse it to a uniform cap before changing the layout
+    br = base.block_rows if isinstance(base.block_rows, int) \
+        else max(base.block_rows)
+    return base.replace(num_buckets=num_buckets, min_width=min_width,
+                        growth=growth, block_rows=br)
+
+
+def search_space(stats: dict, base: Optional[Schedule] = None, *,
+                 tune_batch: bool = False) -> List[Schedule]:
+    """Candidate schedules for a graph with these statistics.
+
+    Deterministic and pruned: the base schedule is always candidate #0
+    (so the tuner can never return something measured-worse than it), and
+    the variants explored depend on what `stats` say about the graph —
+    one knob dimension is varied at a time around the base rather than a
+    full cross product, keeping the list measurable within a small budget.
+
+    `tune_batch=True` adds `batch_sources` variants (only meaningful for
+    programs with a source-set loop; the caller knows from the IR).
+    """
+    base = Schedule() if base is None else base
+    cands: List[Schedule] = [base]
+
+    skewed = (stats.get("deg_cv", 0.0) >= _SKEWED_CV
+              or stats.get("skew", 1.0) >= _SKEWED_MAX_RATIO)
+    flat = stats.get("probe_max_frontier_frac", 1.0) <= _FLAT_FRONTIER
+    max_deg = max(stats.get("max_in_degree", 1),
+                  stats.get("max_out_degree", 1))
+
+    # ---- bucket layout: skewed graphs explore depth, uniform graphs
+    # collapse to one bucket sized to the (narrow) degree range ----------
+    if skewed:
+        layouts = [(4, 8, 4), (5, 8, 4), (3, 8, 8), (4, 16, 4)]
+    else:
+        w = max(_round_up(max_deg, LANE_MULTIPLE), LANE_MULTIPLE)
+        layouts = [(1, min(w, 512), 2), (2, 8, 4)]
+    for nb, mw, gr in layouts:
+        cands.append(_with_layout(base, nb, mw, gr))
+
+    # ---- direction policy + push threshold -----------------------------
+    if flat:
+        # the frontier never grows past the default threshold: every auto
+        # step would push anyway — pin it and drop the occupancy test
+        cands.append(base.replace(direction="push"))
+        cands.append(base.replace(direction="auto",
+                                  push_threshold_frac=1.0 / 4.0))
+    else:
+        cands.append(base.replace(direction="pull"))
+        for frac in (1.0 / 64.0, 1.0 / 4.0):
+            cands.append(base.replace(direction="auto",
+                                      push_threshold_frac=frac))
+
+    # ---- kernel row-block caps (pallas buckets) ------------------------
+    for br in (64, 1024):
+        if br != base.block_rows:
+            cands.append(base.replace(block_rows=br))
+
+    # ---- source-batch width (programs with a set loop only) ------------
+    if tune_batch:
+        for bs in (8, 16, 64):
+            if bs != base.batch_sources:
+                cands.append(base.replace(batch_sources=bs))
+
+    # dedup, order-preserving (Schedule is hashable by design)
+    seen, out = set(), []
+    for c in cands:
+        if c not in seen:
+            seen.add(c)
+            out.append(c)
+    return out
+
+
+def _has_set_param(prog: CompiledProgram) -> bool:
+    return any(p.kind == "set_n" for p in prog.ir.params)
+
+
+# well-known scalar names across the bundled programs (PR's damping etc.);
+# anything unknown gets a safe small positive value
+_SCALAR_DEFAULTS = {"beta": 1e-4, "delta": 0.85, "maxiter": 20}
+
+
+def default_params(prog: CompiledProgram, g, *, seed: int = 0,
+                   num_sources: int = 16) -> dict:
+    """Representative call parameters derived from the program's IR params:
+    node params get vertex 0, source sets a seeded random batch, scalars a
+    named default (`beta`/`delta`/`maxIter`) or 1. Property params stay
+    unset (the generated code initializes them)."""
+    rng = np.random.default_rng(seed)
+    params: dict = {}
+    for p in prog.ir.params[1:]:
+        if p.kind == "node_param":
+            params[p.name] = 0
+        elif p.kind == "set_n":
+            params[p.name] = rng.integers(
+                0, g.num_nodes, size=min(num_sources, g.num_nodes)
+            ).astype(np.int32)
+        elif p.kind == "scalar":
+            v = _SCALAR_DEFAULTS.get(p.name.lower(), 1)
+            params[p.name] = int(v) if p.dtype == "int32" else float(v)
+    return params
+
+
+# --------------------------------------------------------------------------
+# measurement
+# --------------------------------------------------------------------------
+
+def _block_on(out):
+    """Force completion of whatever the program returned (dict of arrays)."""
+    import jax
+    jax.block_until_ready(out)
+    return out
+
+
+def measure_wallclock(bound, params: dict, *, warmup: int = 1,
+                      reps: int = 3) -> float:
+    """min-of-`reps` wall-clock seconds for one `bound(**params)` call,
+    after `warmup` untimed calls (the first pays the jit trace)."""
+    for _ in range(max(warmup, 0)):
+        _block_on(bound(**params))
+    best = float("inf")
+    for _ in range(max(reps, 1)):
+        t0 = time.perf_counter()
+        _block_on(bound(**params))
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+# --------------------------------------------------------------------------
+# records + store
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class TuningRecord:
+    """One finished tuning run, JSON-serializable.
+
+    Keyed by ``(source_digest, backend, graph_fingerprint)``: the digest
+    pins the *algorithm text*, the fingerprint pins the *graph contents*
+    — if either changed since the record was written, replaying the
+    stored schedule would be tuning for a different problem, so lookups
+    reject the record and the caller re-tunes."""
+
+    source_digest: str
+    backend: str
+    graph_fingerprint: str
+    fn_name: str
+    schedule: dict             # the chosen schedule, as a plain dict
+    best_ms: float
+    default_ms: float          # trial #0 = the program's own schedule
+    trials: list               # [{"schedule": dict, "ms": float}, ...]
+    budget: int
+    seed: int
+    graph_stats: dict = dataclasses.field(default_factory=dict)
+    version: int = RECORD_VERSION
+
+    def key(self) -> tuple:
+        return (self.source_digest, self.backend, self.graph_fingerprint)
+
+    def best_schedule(self) -> Schedule:
+        return schedule_from_dict(self.schedule)
+
+    def to_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "TuningRecord":
+        known = {f.name for f in dataclasses.fields(cls)}
+        return cls(**{k: v for k, v in d.items() if k in known})
+
+    def to_json(self) -> str:
+        return json.dumps(self.to_dict(), indent=2)
+
+    @classmethod
+    def from_json(cls, text: str) -> "TuningRecord":
+        return cls.from_dict(json.loads(text))
+
+
+class TuningStore:
+    """JSON-file-backed map of `TuningRecord`s.
+
+    A server process points this at a path, calls `autotune(..., store=...)`
+    once per (program, graph), and every later process start is a lookup
+    instead of a measurement sweep. Lookups are strict: a record is
+    returned only when its stored digest/fingerprint/version equal the
+    requested key — anything else (edited source, regenerated graph,
+    tampered or stale file) is a miss, so the caller re-tunes."""
+
+    def __init__(self, path: Optional[str] = None):
+        self.path = path
+        self._records: dict = {}
+        if path and os.path.exists(path):
+            self.load()
+
+    def load(self) -> None:
+        """Read the store file; malformed content is a miss, not a crash —
+        an unparseable file or record means "never tuned", so the caller
+        re-measures and the next `save()` rewrites a clean file."""
+        self._records = {}
+        try:
+            with open(self.path) as f:
+                data = json.load(f)
+            records = data.get("records", [])
+        except (json.JSONDecodeError, AttributeError, OSError):
+            return
+        for d in records:
+            try:
+                rec = TuningRecord.from_dict(d)
+                self._records[rec.key()] = rec
+            except (TypeError, ValueError):
+                continue   # skip the damaged record, keep the rest
+
+    def save(self) -> None:
+        if not self.path:
+            return
+        data = {"version": RECORD_VERSION,
+                "records": [r.to_dict() for r in self._records.values()]}
+        tmp = f"{self.path}.tmp"
+        with open(tmp, "w") as f:
+            json.dump(data, f, indent=2)
+        os.replace(tmp, self.path)
+
+    def lookup(self, digest: str, backend: str,
+               fingerprint: str) -> Optional[TuningRecord]:
+        rec = self._records.get((digest, backend, fingerprint))
+        if rec is None:
+            return None
+        # strict validation: a record is only trusted if its own fields
+        # restate the key it is filed under and its version is current
+        if (rec.source_digest != digest or rec.backend != backend
+                or rec.graph_fingerprint != fingerprint
+                or rec.version != RECORD_VERSION):
+            return None
+        return rec
+
+    def put(self, rec: TuningRecord) -> None:
+        self._records[rec.key()] = rec
+
+    def __len__(self) -> int:
+        return len(self._records)
+
+
+# --------------------------------------------------------------------------
+# the tuner
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class TuningResult:
+    """What `autotune` returns: the winning schedule, the program compiled
+    under it (a compile-cache resident), and the full record (also in the
+    store, if one was given). `from_store` is True when no measurement ran
+    because a valid persisted record answered the query."""
+
+    schedule: Schedule
+    program: CompiledProgram
+    record: TuningRecord
+    from_store: bool = False
+
+    @property
+    def speedup(self) -> float:
+        """default-schedule time / best time (>= 1.0 by construction when
+        measured; whatever the stored record says on a store hit)."""
+        return (self.record.default_ms / self.record.best_ms
+                if self.record.best_ms else 1.0)
+
+
+def autotune(prog: CompiledProgram, g, *, budget: int = 16, seed: int = 0,
+             params: Optional[dict] = None,
+             warmup: int = 1, reps: int = 3,
+             measure: Optional[Callable] = None,
+             store: Union[TuningStore, str, None] = None,
+             verbose: bool = False) -> TuningResult:
+    """Search the `Schedule` space for `prog` on `g`; return the best.
+
+    * `budget` caps the number of measured candidates (trial #0 is always
+      the program's own schedule, so the result is never measured-worse
+      than the baseline).
+    * `params` are the call parameters to time with; omitted, they are
+      derived from the program's IR (`default_params`).
+    * `measure(bound, params) -> seconds` replaces the wall-clock timer
+      (tests inject a deterministic cost model here).
+    * `store` (a `TuningStore` or a path) persists the result; a valid
+      stored record for (source digest, backend, graph fingerprint) skips
+      measurement entirely, and a record whose digest or fingerprint no
+      longer matches is ignored and re-tuned.
+
+    Deterministic given (graph, seed, budget) and a deterministic
+    `measure`: candidate order, truncation, and tie-breaking (earliest
+    trial wins) contain no randomness beyond the seeded param draw.
+    """
+    if not prog.dsl_source:
+        raise ValueError(
+            "program has no dsl_source to recompile under candidate "
+            "schedules (compile it via compile_program/compile_bundled)")
+    if prog.backend == "distributed":
+        raise ValueError(
+            "autotune supports the local and pallas backends; the "
+            "distributed codegen has no frontier/batching knobs to tune yet")
+    ctx = get_context(g)
+    digest = source_digest(prog.dsl_source)
+    fingerprint = ctx.fingerprint()
+
+    if isinstance(store, str):
+        store = TuningStore(store)
+    if store is not None:
+        rec = store.lookup(digest, prog.backend, fingerprint)
+        if rec is not None:
+            try:
+                sched = rec.best_schedule()
+            except ValueError:
+                sched = None   # stored schedule invalid here -> re-tune
+            if sched is not None:
+                return TuningResult(schedule=sched,
+                                    program=prog.recompile(sched),
+                                    record=rec, from_store=True)
+
+    stats = ctx.stats()
+    cands = search_space(stats, base=prog.schedule,
+                         tune_batch=_has_set_param(prog))
+    if budget < 1:
+        raise ValueError(f"budget must be >= 1, got {budget}")
+    cands = cands[:budget]
+    if params is None:
+        params = default_params(prog, g, seed=seed)
+    if measure is None:
+        def measure(bound, p, _w=warmup, _r=reps):
+            return measure_wallclock(bound, p, warmup=_w, reps=_r)
+
+    trials = []
+    best_i, best_s = 0, float("inf")
+    for i, cand in enumerate(cands):
+        trial = prog.recompile(cand)       # compile-cache hit when seen
+        secs = float(measure(trial.bind(g), params))
+        trials.append({"schedule": schedule_to_dict(cand),
+                       "ms": round(1e3 * secs, 4)})
+        if secs < best_s:                  # strict <: earliest trial wins ties
+            best_i, best_s = i, secs
+        if verbose:
+            mark = " <-- best" if best_i == i else ""
+            print(f"  trial {i:2d}: {1e3 * secs:9.2f} ms  {cand}{mark}")
+
+    best = cands[best_i]
+    record = TuningRecord(
+        source_digest=digest, backend=prog.backend,
+        graph_fingerprint=fingerprint, fn_name=prog.name,
+        schedule=schedule_to_dict(best),
+        best_ms=trials[best_i]["ms"], default_ms=trials[0]["ms"],
+        trials=trials, budget=budget, seed=seed, graph_stats=dict(stats))
+    if store is not None:
+        store.put(record)
+        store.save()
+    return TuningResult(schedule=best, program=prog.recompile(best),
+                        record=record)

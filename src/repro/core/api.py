@@ -51,6 +51,16 @@ class CompiledProgram:
     ir: object
     schedule: Schedule   # the schedule baked into `source`
     dist_meta: Optional[dict] = None   # distributed backend: output specs
+    dsl_source: str = ""  # the StarPlat source this was compiled from
+    jit: bool = True      # jit flag the program was compiled under
+
+    def recompile(self, schedule: Schedule) -> "CompiledProgram":
+        """The same algorithm under a different schedule — a compile-cache
+        probe, so repeated requests (e.g. autotuning trials) for an
+        already-built (source, backend, schedule) are free."""
+        return compile_program(self.dsl_source, backend=self.backend,
+                               fn_name=self.name, jit=self.jit,
+                               schedule=schedule)
 
     def __call__(self, *args, **kwargs):
         return self.fn(*args, **kwargs)
@@ -202,9 +212,15 @@ def compile_program(source: str, backend: str = "local",
     prog = CompiledProgram(
         name=irfn.name, backend=backend, source=src, fn=fn, raw_fn=raw,
         ir=irfn, schedule=sched,
-        dist_meta=(extra_env or {}).get("__dist_meta__"))
+        dist_meta=(extra_env or {}).get("__dist_meta__"),
+        dsl_source=source, jit=jit)
     if cache_key is not None:
         _COMPILE_CACHE[cache_key] = prog
+        if fn_name is None:
+            # also file under the resolved name, so an explicit request for
+            # the same function (e.g. CompiledProgram.recompile) is a hit
+            # on the same object rather than a duplicate compile
+            _COMPILE_CACHE[(digest, backend, sched, irfn.name, jit)] = prog
     return prog
 
 

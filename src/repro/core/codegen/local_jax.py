@@ -48,7 +48,12 @@ class LocalCodegen:
         self.schedule = resolve_schedule(schedule, batch_sources=batch_sources)
 
     def _engine_kwargs(self) -> str:
-        """`, threshold_frac=..., direction=...` literals for runtime calls."""
+        """`, threshold_frac=..., direction=...` literals for runtime calls.
+
+        These are the Schedule knobs the local backend consumes directly;
+        the layout knobs shape the sliced-ELL views and `block_rows` is a
+        pallas-kernel grid cap (PallasCodegen appends it via
+        `_kernel_kwargs`). Knob reference: docs/schedule.md."""
         s = self.schedule
         return (f", threshold_frac={s.push_threshold_frac!r}"
                 f", direction={s.direction!r}")

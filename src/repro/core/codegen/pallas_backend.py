@@ -56,6 +56,22 @@ def _only_reads_side(expr, side: str) -> bool:
 class PallasCodegen(LocalCodegen):
     backend_name = "pallas"
 
+    def _block_rows_literal(self) -> str:
+        """`Schedule.block_rows` as a source literal for the kernel ops.
+
+        A uniform int cap stays an int; per-bucket caps are emitted as a
+        {bucket_width: cap} mapping (width-keyed, because empty buckets are
+        dropped from a graph's sliced view, so positional caps would drift
+        per graph)."""
+        s = self.schedule
+        if isinstance(s.block_rows, int):
+            return repr(s.block_rows)
+        return repr(dict(zip(s.bucket_widths(), s.bucket_block_rows())))
+
+    def _kernel_kwargs(self) -> str:
+        """Literal kwargs for kops calls: engine knobs + kernel block caps."""
+        return f"{self._engine_kwargs()}, block_rows={self._block_rows_literal()}"
+
     def generate(self) -> str:
         f, em = self.f, self.em
         g = f.graph_param
@@ -91,7 +107,7 @@ class PallasCodegen(LocalCodegen):
         new = em.uid("new")
         fr = frontier or "None"
         em.w(f"{new} = kops.relax_minplus(_ell, {s.prop}, frontier={fr}, "
-             f"csr={g}{self._engine_kwargs()})")
+             f"csr={g}{self._kernel_kwargs()})")
         return new
 
     # ---- hot pattern 2: neighborhood sum → sliced-ELL (+,×) kernel -----------
@@ -106,7 +122,8 @@ class PallasCodegen(LocalCodegen):
             vctx = VertexCtx(it=ectx.it, mask=None, parent=HostCtx())
             em.w(f"{contrib} = {self.ex.expr(s.expr, vctx)}")
             em.w(f"{contrib} = jnp.asarray({contrib}, jnp.float32) * jnp.ones((N,), jnp.float32)")
-            em.w(f"{s.name} = {s.name} + kops.gather_plustimes(_ell, {contrib})")
+            em.w(f"{s.name} = {s.name} + kops.gather_plustimes(_ell, "
+                 f"{contrib}, block_rows={self._block_rows_literal()})")
             return
         super().s_IAssign(s, ctx)
 

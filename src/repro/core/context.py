@@ -21,11 +21,23 @@ check guards the window before the callback fires.
 
 `prepare(g, schedule)` is the explicit warm-up entry point: call it before
 serving traffic so the first query does not pay the host-side view build.
+
+The context also owns the graph's *identity and shape* for the autotuner
+(`repro.autotune`): `fingerprint()` is a stable content digest (keys
+persisted `TuningRecord`s, so a stored schedule is never replayed against
+a different graph), and `stats()` summarizes the degree distribution and
+frontier growth (skew, average degree, a BFS probe) — the signals the
+tuner's search-space pruning branches on. Both are memoized views like
+everything else here. See `docs/architecture.md` for how the
+Schedule / GraphContext / compile-cache triad fits together.
 """
 from __future__ import annotations
 
+import hashlib
 import weakref
 from typing import Optional
+
+import numpy as np
 
 from ..graph.csr import (CSRGraph, pad_nodes, resolve_schedule, to_ell,
                          to_sliced_ell)
@@ -90,6 +102,94 @@ class GraphContext:
         key = ("dist_1d", int(num_shards), bool(ell))
         return self.view(key, lambda g: rtd.prepare_graph_1d(
             g, num_shards, ell=ell))
+
+    def fingerprint(self) -> str:
+        """Stable content digest of the graph (structure + weights).
+
+        Keys persisted autotuning records: two CSRGraphs with identical
+        edges hash equal regardless of object identity, and any edit to
+        the graph yields a different fingerprint, so a stored schedule is
+        re-tuned rather than silently replayed against the wrong graph."""
+        return self.view(("fingerprint",), _graph_fingerprint)
+
+    def stats(self) -> dict:
+        """Degree-distribution + frontier-growth summary (host-side, memoized).
+
+        The autotuner's search-space pruning branches on these: a power-law
+        graph (high ``skew``/``deg_cv``, explosive ``probe_growth``) wants
+        deep bucket layouts and direction switching; a road-like graph
+        (uniform degree, ``probe_depth`` at the cap, flat frontier) wants a
+        single narrow bucket and a pinned sparse-frontier direction."""
+        return self.view(("stats",), _graph_stats)
+
+
+# --------------------------------------------------------------------------
+# graph identity + statistics (autotuner inputs)
+# --------------------------------------------------------------------------
+
+PROBE_MAX_LEVELS = 64   # frontier probe cap: deep graphs saturate the signal
+
+
+def _graph_fingerprint(g: CSRGraph) -> str:
+    """sha256 over (N, E, indptr, indices, weights), truncated to 16 hex
+    chars. Content-addressed: independent of object identity and of every
+    derived view."""
+    h = hashlib.sha256()
+    h.update(f"{g.num_nodes}:{g.num_edges}:".encode())
+    for arr in (g.indptr, g.indices, g.weights):
+        h.update(np.ascontiguousarray(np.asarray(arr)).tobytes())
+    return h.hexdigest()[:16]
+
+
+def _graph_stats(g: CSRGraph) -> dict:
+    """Host-side numpy summary of the degree distribution plus a capped
+    level-synchronous BFS probe from the highest-out-degree vertex."""
+    n, e = g.num_nodes, g.num_edges
+    out_deg = np.asarray(g.out_degree)
+    avg = e / n if n else 0.0
+    std = float(out_deg.std()) if n else 0.0
+    stats = {
+        "num_nodes": n,
+        "num_edges": e,
+        "avg_degree": round(avg, 3),
+        "max_out_degree": int(g.max_out_degree),
+        "max_in_degree": int(g.max_in_degree),
+        # degree skew: how far the heaviest hub sits above the mean
+        "skew": round(g.max_out_degree / avg, 3) if avg else 1.0,
+        # coefficient of variation: 0 for regular graphs, >1 for power laws
+        "deg_cv": round(std / avg, 3) if avg else 0.0,
+    }
+    if e == 0:
+        stats.update(probe_depth=0, probe_max_frontier_frac=0.0,
+                     probe_growth=1.0, probe_reach_frac=0.0)
+        return stats
+    # frontier-growth probe: BFS from the heaviest hub, recording per-level
+    # frontier sizes (edge-parallel sweep per level — O(E) each, capped)
+    edge_src = np.asarray(g.edge_src)
+    indices = np.asarray(g.indices)
+    root = int(out_deg.argmax())
+    level = np.full(n, -1, np.int32)
+    level[root] = 0
+    front = np.zeros(n, bool)
+    front[root] = True
+    sizes = [1]
+    for lvl in range(PROBE_MAX_LEVELS):
+        hit = np.zeros(n, bool)
+        hit[indices[front[edge_src]]] = True
+        newly = hit & (level < 0)
+        if not newly.any():
+            break
+        level[newly] = lvl + 1
+        front = newly
+        sizes.append(int(newly.sum()))
+    growth = max((b / a for a, b in zip(sizes, sizes[1:])), default=1.0)
+    stats.update(
+        probe_depth=len(sizes) - 1,                  # levels until exhaustion/cap
+        probe_max_frontier_frac=round(max(sizes) / n, 4),
+        probe_growth=round(growth, 2),               # peak level-over-level ratio
+        probe_reach_frac=round(sum(sizes) / n, 4),   # fraction reached from hub
+    )
+    return stats
 
 
 # --------------------------------------------------------------------------

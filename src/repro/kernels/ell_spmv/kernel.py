@@ -89,7 +89,9 @@ def ell_spmv(cols: jax.Array, vals: jax.Array, x: jax.Array, *,
 
 def _best_block(rows: int, cap: int = 256) -> int:
     """Largest power-of-two row block ≤ cap dividing `rows` (rows % 8 == 0).
-    Sliced-ELL buckets (ops.py) pick their grid with this."""
+    Sliced-ELL buckets (ops.py) pick their grid with this; `cap` is the
+    per-bucket `Schedule.block_rows` knob (a tall block amortizes grid-step
+    overhead, a short one keeps the block×width tile inside VMEM)."""
     b = 8
     while b * 2 <= cap and rows % (b * 2) == 0:
         b *= 2

@@ -107,27 +107,42 @@ def _gather_dense(cols, contrib, *, block_rows: int = 256):
 # sliced-ELL ops (frontier-aware engine)
 # --------------------------------------------------------------------------
 
-def _bucket_minplus(cols, wts, x):
+def _bucket_caps(ell: SlicedEllGraph, block_rows):
+    """Per-kept-bucket kernel row-block caps from `Schedule.block_rows`.
+
+    `block_rows` is an int (uniform cap), a {bucket_width: cap} mapping
+    (the pallas codegen's literal form — keyed by width because empty
+    buckets are dropped from the sliced view, so positional indexing would
+    drift), or None (default cap)."""
+    if block_rows is None:
+        return [256] * len(ell.cols)
+    if isinstance(block_rows, dict):
+        return [int(block_rows.get(w, 256)) for w in ell.widths]
+    return [int(block_rows)] * len(ell.cols)
+
+
+def _bucket_minplus(cols, wts, x, cap: int = 256):
     """x: [M] (SpMV) or [M, B] (SpMM, lanes = source batch)."""
     if _USE_KERNEL:
         return ell_spmv(cols, wts, x, semiring="minplus",
-                        block_rows=_best_block(cols.shape[0]),
+                        block_rows=_best_block(cols.shape[0], cap),
                         interpret=_INTERPRET)
     if x.ndim == 2:
         wts = wts[..., None]
     return jnp.min(jnp.take(x, cols, axis=0) + wts, axis=1)
 
 
-def _bucket_plustimes(cols, x):
+def _bucket_plustimes(cols, x, cap: int = 256):
     if _USE_KERNEL:
         ones = jnp.ones(cols.shape, x.dtype)   # pads hit the 0 sentinel
         return ell_spmv(cols, ones, x, semiring="plustimes",
-                        block_rows=_best_block(cols.shape[0]),
+                        block_rows=_best_block(cols.shape[0], cap),
                         interpret=_INTERPRET)
     return jnp.sum(jnp.take(x, cols, axis=0), axis=1)
 
 
-def _relax_sliced_pull(ell: SlicedEllGraph, dist, frontier=None):
+def _relax_sliced_pull(ell: SlicedEllGraph, dist, frontier=None,
+                       block_rows=None):
     """Masked-pull sweep: per-bucket min-plus kernels + COO hub fallback.
     Frontier masking happens on the gather source (x), so the kernels stay
     unmasked and rectangular. dist may be [N] (one traversal) or [B, N]
@@ -146,8 +161,9 @@ def _relax_sliced_pull(ell: SlicedEllGraph, dist, frontier=None):
     else:
         x_ext = jnp.zeros((n + 1,), dist.dtype).at[:n].set(x)
         y = jnp.full((n,), INF, dist.dtype)
-    for cols, wts, rows in zip(ell.cols, ell.wts, ell.rows):
-        y = y.at[rows].min(_bucket_minplus(cols, wts, x_ext), mode="drop")
+    for cols, wts, rows, cap in zip(ell.cols, ell.wts, ell.rows,
+                                    _bucket_caps(ell, block_rows)):
+        y = y.at[rows].min(_bucket_minplus(cols, wts, x_ext, cap), mode="drop")
     if ell.hub_rows.shape[0]:
         hub_w = ell.hub_wts[:, None] if batched else ell.hub_wts
         y = y.at[ell.hub_rows].min(x_ext[ell.hub_cols] + hub_w, mode="drop")
@@ -167,7 +183,7 @@ def _relax_push(g: CSRGraph, dist, frontier):
 
 
 def relax_minplus(cols_or_ell, wts_or_dist, dist=None, *, frontier=None,
-                  csr: CSRGraph | None = None, block_rows: int = 256,
+                  csr: CSRGraph | None = None, block_rows=256,
                   threshold_frac: float | None = None,
                   direction: str = "auto"):
     """One SSSP relax step.
@@ -188,10 +204,14 @@ def relax_minplus(cols_or_ell, wts_or_dist, dist=None, *, frontier=None,
     per-bucket min-plus SpMM over the [N+1, B] operand, and the push/pull
     choice is made per batch ROW (homogeneous batches take a single-
     direction fast path; mixed batches run each direction masked to its
-    rows, which partition the frontier, so the result is exact)."""
+    rows, which partition the frontier, so the result is exact).
+
+    `block_rows` caps the kernel row-block per bucket: an int (uniform
+    cap), or — sliced form only — a {bucket_width: cap} mapping, the
+    literal form `Schedule.block_rows` reaches generated code in."""
     if not isinstance(cols_or_ell, SlicedEllGraph):
         return _relax_dense(cols_or_ell, wts_or_dist, dist,
-                            block_rows=block_rows)
+                            block_rows=int(block_rows))
     if dist is not None:
         raise TypeError(
             "sliced form takes (ell, dist) positionally; pass the frontier "
@@ -199,11 +219,11 @@ def relax_minplus(cols_or_ell, wts_or_dist, dist=None, *, frontier=None,
     ell, dist = cols_or_ell, wts_or_dist
     if frontier is None or csr is None:
         # dense sweep (or no CSR for push): pull is the only orientation
-        return _relax_sliced_pull(ell, dist, frontier)
+        return _relax_sliced_pull(ell, dist, frontier, block_rows)
     if direction == "push":
         return _relax_push(csr, dist, frontier)
     if direction == "pull":
-        return _relax_sliced_pull(ell, dist, frontier)
+        return _relax_sliced_pull(ell, dist, frontier, block_rows)
     from ...core.runtime import (_cond_by_rows, frontier_rows_should_push,
                                  frontier_should_push)
     if dist.ndim == 2:
@@ -212,29 +232,30 @@ def relax_minplus(cols_or_ell, wts_or_dist, dist=None, *, frontier=None,
         return _cond_by_rows(
             rows_push,
             lambda d: _relax_push(csr, d, frontier),
-            lambda d: _relax_sliced_pull(ell, d, frontier),
+            lambda d: _relax_sliced_pull(ell, d, frontier, block_rows),
             lambda d: _relax_sliced_pull(
                 ell, _relax_push(csr, d, frontier & rows_push[:, None]),
-                frontier & ~rows_push[:, None]),
+                frontier & ~rows_push[:, None], block_rows),
             dist)
     return jax.lax.cond(
         frontier_should_push(frontier, ell.num_nodes, threshold_frac),
         lambda d: _relax_push(csr, d, frontier),
-        lambda d: _relax_sliced_pull(ell, d, frontier),
+        lambda d: _relax_sliced_pull(ell, d, frontier, block_rows),
         dist)
 
 
 def gather_plustimes(cols_or_ell, contrib, n_out: int = None, *,
-                     block_rows: int = 256):
+                     block_rows=256):
     """PR gather: y[v] = sum_{u in-nbr} contrib[u]; `contrib` already divided
     by out-degree.
 
     Dense form: `gather_plustimes(cols, contrib)` (returns padded rows).
     Sliced form: `gather_plustimes(ell, contrib)` (returns exactly [N]).
     Batched sliced form: contrib [B, N] → [B, N] (plus-times SpMM, one
-    bucket pass shared by all B lanes)."""
+    bucket pass shared by all B lanes). `block_rows` caps the per-bucket
+    kernel row-block (int, or {bucket_width: cap} in the sliced form)."""
     if not isinstance(cols_or_ell, SlicedEllGraph):
-        return _gather_dense(cols_or_ell, contrib, block_rows=block_rows)
+        return _gather_dense(cols_or_ell, contrib, block_rows=int(block_rows))
     ell = cols_or_ell
     n = ell.num_nodes
     batched = contrib.ndim == 2
@@ -245,8 +266,9 @@ def gather_plustimes(cols_or_ell, contrib, n_out: int = None, *,
     else:
         x_ext = jnp.zeros((n + 1,), contrib.dtype).at[:n].set(contrib)
         y = jnp.zeros((n,), contrib.dtype)
-    for cols, _, rows in zip(ell.cols, ell.wts, ell.rows):
-        y = y.at[rows].add(_bucket_plustimes(cols, x_ext), mode="drop")
+    for cols, rows, cap in zip(ell.cols, ell.rows,
+                               _bucket_caps(ell, block_rows)):
+        y = y.at[rows].add(_bucket_plustimes(cols, x_ext, cap), mode="drop")
     if ell.hub_rows.shape[0]:
         y = y.at[ell.hub_rows].add(x_ext[ell.hub_cols], mode="drop")
     return y.T if batched else y

@@ -21,6 +21,11 @@ prepare time; mutating it after compile never changes a compiled program.
 
 This module is intentionally dependency-free (no jax, no repro imports) so
 every layer — graph views, runtime, codegen, kernels — can use it.
+
+Knob-by-knob reference (type, default, valid range, consuming backend,
+measured perf guidance): ``docs/schedule.md`` — its table is asserted
+against ``dataclasses.fields(Schedule)`` by tests/test_docs.py, so the
+two cannot drift. ``repro.autotune`` searches this space per graph.
 """
 from __future__ import annotations
 
@@ -60,6 +65,15 @@ class Schedule:
         by frontier occupancy; ``"push"`` / ``"pull"`` pin one direction.
         Both directions compute the identical relaxation, so pinning never
         changes results — only the execution schedule.
+    block_rows:
+        Row-block (grid tile height) cap for the per-bucket ELL kernels on
+        the pallas backend: either one int (uniform cap for every bucket)
+        or a tuple of per-bucket caps of length ``num_buckets``. Each cap
+        must be a positive multiple of ``LANE_MULTIPLE`` (8); the kernel
+        launcher picks the largest power-of-two block <= the cap that
+        divides the bucket's (8-aligned) row count. Narrow buckets amortize
+        grid-step overhead with tall blocks; wide buckets may need short
+        blocks to fit their ``block * width`` tile in VMEM.
     """
 
     num_buckets: int = 4
@@ -68,6 +82,7 @@ class Schedule:
     push_threshold_frac: float = 1.0 / 16.0
     batch_sources: int = 32
     direction: str = "auto"
+    block_rows: object = 256   # int (uniform) or tuple of per-bucket caps
 
     def __post_init__(self):
         set_ = lambda k, v: object.__setattr__(self, k, v)  # noqa: E731 (frozen)
@@ -115,6 +130,32 @@ class Schedule:
             raise ValueError(
                 f"Schedule.direction must be one of {_DIRECTIONS}, got "
                 f"{self.direction!r}")
+        br = self.block_rows
+        if isinstance(br, (list, tuple)):
+            br = tuple(br)
+            if len(br) != self.num_buckets:
+                raise ValueError(
+                    f"Schedule.block_rows tuple must have one cap per bucket "
+                    f"(num_buckets={self.num_buckets}), got {len(br)} entries "
+                    f"— or pass a single int for a uniform cap")
+        else:
+            br = (br,)
+        norm = []
+        for v in br:
+            if isinstance(v, bool) or not isinstance(v, numbers.Integral):
+                if not (isinstance(v, float) and v.is_integer()):
+                    raise ValueError(
+                        f"Schedule.block_rows entries must be integers, got "
+                        f"{v!r}")
+            v = int(v)
+            if v <= 0 or v % LANE_MULTIPLE:
+                raise ValueError(
+                    f"Schedule.block_rows caps must be positive multiples of "
+                    f"{LANE_MULTIPLE} (VPU sublane count), got {v}")
+            norm.append(v)
+        set_("block_rows",
+             tuple(norm) if isinstance(self.block_rows, (list, tuple))
+             else norm[0])
 
     # ------------------------------------------------------------------
     def layout_key(self) -> tuple:
@@ -126,6 +167,14 @@ class Schedule:
     def bucket_widths(self) -> tuple:
         return tuple(self.min_width * self.growth ** i
                      for i in range(self.num_buckets))
+
+    def bucket_block_rows(self) -> tuple:
+        """Per-bucket kernel row-block caps, always of length ``num_buckets``
+        (a uniform int cap is broadcast). This is the form the pallas
+        codegen bakes into generated source."""
+        if isinstance(self.block_rows, tuple):
+            return self.block_rows
+        return (self.block_rows,) * self.num_buckets
 
     def replace(self, **changes) -> "Schedule":
         """Functional update (alias for ``dataclasses.replace``)."""

@@ -1,0 +1,281 @@
+"""Autotuner behavior: determinism, persistence, and staleness rejection.
+
+Wall-clock timing is inherently noisy, so the determinism tests inject a
+deterministic `measure=` cost model (keyed off the trial's schedule); the
+contract under test is that everything *around* the measurement —
+candidate derivation, trial order, truncation, tie-breaking, record
+contents — is exactly reproducible given (graph, seed, budget).
+"""
+import dataclasses
+import json
+
+import numpy as np
+import pytest
+
+from repro.autotune import (TuningRecord, TuningStore, autotune,
+                            default_params, schedule_from_dict,
+                            schedule_to_dict, search_space, source_digest)
+from repro.core import Schedule, compile_bundled, get_context
+from repro.graph import preferential_attachment
+from repro.graph.algorithms_ref import sssp_ref
+from repro.graph.generators import road
+
+
+@pytest.fixture(scope="module")
+def g_pl():
+    return preferential_attachment(300, m=5, seed=3)
+
+
+@pytest.fixture(scope="module")
+def g_road():
+    # big enough that the BFS probe's peak frontier stays under the
+    # always-sparse threshold (peak ~ 2/side of N on a grid)
+    return road(32, seed=7)
+
+
+@pytest.fixture(scope="module")
+def sssp_prog():
+    return compile_bundled("sssp", backend="local")
+
+
+def fake_measure(bound, params):
+    """Deterministic, schedule-dependent cost: no wall clock involved."""
+    s = bound.program.schedule
+    return 1.0 + (hash(s) % 1000) / 1000.0
+
+
+# --------------------------------------------------------------------------
+# search space
+# --------------------------------------------------------------------------
+
+def test_search_space_base_first_and_deduped(g_pl):
+    stats = get_context(g_pl).stats()
+    cands = search_space(stats)
+    assert cands[0] == Schedule()
+    assert len(cands) == len(set(cands))
+    assert all(isinstance(c, Schedule) for c in cands)
+
+
+def test_search_space_prunes_by_family(g_pl, g_road):
+    pl = search_space(get_context(g_pl).stats())
+    rd = search_space(get_context(g_road).stats())
+    # power-law: explores deep bucket layouts; road: collapses to 1 bucket
+    assert any(c.num_buckets >= 5 for c in pl)
+    assert any(c.num_buckets == 1 for c in rd)
+    # road frontiers stay sparse -> a pinned-push candidate appears
+    assert any(c.direction == "push" for c in rd)
+    assert not any(c.direction == "push" for c in pl)
+    assert pl != rd
+
+
+def test_search_space_batch_dim_gated(g_pl):
+    stats = get_context(g_pl).stats()
+    without = search_space(stats)
+    with_batch = search_space(stats, tune_batch=True)
+    extra = [c for c in with_batch if c not in without]
+    assert extra and all(c.batch_sources != Schedule().batch_sources
+                         for c in extra)
+
+
+# --------------------------------------------------------------------------
+# determinism
+# --------------------------------------------------------------------------
+
+def test_autotune_deterministic_same_seed_budget(sssp_prog, g_pl):
+    r1 = autotune(sssp_prog, g_pl, budget=6, seed=0, measure=fake_measure)
+    r2 = autotune(sssp_prog, g_pl, budget=6, seed=0, measure=fake_measure)
+    assert r1.schedule == r2.schedule
+    assert r1.record.trials == r2.record.trials
+    assert r1.record.key() == r2.record.key()
+
+
+def test_autotune_budget_truncates_trials(sssp_prog, g_pl):
+    r = autotune(sssp_prog, g_pl, budget=3, seed=0, measure=fake_measure)
+    assert len(r.record.trials) == 3
+    # trial #0 is always the program's own schedule
+    assert r.record.trials[0]["schedule"] == schedule_to_dict(
+        sssp_prog.schedule)
+
+
+def test_autotune_never_measured_worse_than_base(sssp_prog, g_pl):
+    r = autotune(sssp_prog, g_pl, budget=8, seed=0, measure=fake_measure)
+    assert r.record.best_ms <= r.record.default_ms
+    assert r.speedup >= 1.0
+
+
+def test_autotune_result_correct(sssp_prog, g_pl):
+    """The tuned program still computes SSSP exactly (schedules only change
+    execution, never results)."""
+    r = autotune(sssp_prog, g_pl, budget=6, seed=0, measure=fake_measure)
+    out = np.asarray(r.program.bind(g_pl)(src=0)["dist"])
+    assert np.array_equal(out, sssp_ref(g_pl, 0).astype(np.int32))
+
+
+def test_autotune_reuses_compile_cache(sssp_prog, g_pl):
+    from repro.core import compile_cache_size
+    autotune(sssp_prog, g_pl, budget=6, seed=0, measure=fake_measure)
+    size1 = compile_cache_size()
+    autotune(sssp_prog, g_pl, budget=6, seed=0, measure=fake_measure)
+    assert compile_cache_size() == size1   # second sweep: all cache hits
+
+
+def test_recompile_own_schedule_is_identity(sssp_prog):
+    """Trial #0 recompiles the program under its own schedule — that must
+    be a cache hit on the SAME object (no duplicate compile, no fresh jit
+    wrapper), even though the program was compiled with fn_name=None."""
+    assert sssp_prog.recompile(sssp_prog.schedule) is sssp_prog
+
+
+def test_default_params_from_ir(g_pl):
+    p = default_params(compile_bundled("sssp"), g_pl, seed=0)
+    assert p == {"src": 0}
+    p = default_params(compile_bundled("bc"), g_pl, seed=0)
+    assert p["sourceSet"].dtype == np.int32
+    p2 = default_params(compile_bundled("bc"), g_pl, seed=0)
+    assert np.array_equal(p["sourceSet"], p2["sourceSet"])   # seeded
+    p = default_params(compile_bundled("pr"), g_pl, seed=0)
+    assert p["maxIter"] == 20 and 0 < p["delta"] < 1
+
+
+# --------------------------------------------------------------------------
+# records: JSON round-trip
+# --------------------------------------------------------------------------
+
+def test_schedule_dict_round_trip_through_json():
+    for s in (Schedule(), Schedule(block_rows=(64, 64, 128, 256)),
+              Schedule(direction="push", push_threshold_frac=0.25)):
+        thawed = schedule_from_dict(
+            json.loads(json.dumps(schedule_to_dict(s))))
+        assert thawed == s
+
+
+def test_schedule_from_dict_rejects_unknown_fields():
+    d = schedule_to_dict(Schedule())
+    d["warp_size"] = 32
+    with pytest.raises(ValueError, match="warp_size"):
+        schedule_from_dict(d)
+
+
+def test_tuning_record_json_round_trip(sssp_prog, g_pl):
+    rec = autotune(sssp_prog, g_pl, budget=4, seed=0,
+                   measure=fake_measure).record
+    thawed = TuningRecord.from_json(rec.to_json())
+    assert thawed == rec
+    assert thawed.best_schedule() == rec.best_schedule()
+    assert isinstance(thawed.best_schedule(), Schedule)
+
+
+# --------------------------------------------------------------------------
+# store: persistence + staleness rejection
+# --------------------------------------------------------------------------
+
+def test_store_hit_skips_measurement(sssp_prog, g_pl, tmp_path):
+    path = str(tmp_path / "tuned.json")
+    r1 = autotune(sssp_prog, g_pl, budget=5, seed=0, measure=fake_measure,
+                  store=path)
+    assert not r1.from_store
+
+    calls = []
+
+    def counting_measure(bound, params):
+        calls.append(1)
+        return fake_measure(bound, params)
+
+    r2 = autotune(sssp_prog, g_pl, budget=5, seed=0,
+                  measure=counting_measure, store=path)
+    assert r2.from_store and not calls
+    assert r2.schedule == r1.schedule
+
+
+def _tamper(path, field, value):
+    with open(path) as f:
+        data = json.load(f)
+    assert data["records"], "store unexpectedly empty"
+    data["records"][0][field] = value
+    with open(path, "w") as f:
+        json.dump(data, f)
+
+
+@pytest.mark.parametrize("field", ["source_digest", "graph_fingerprint"])
+def test_store_rejects_mismatched_record(sssp_prog, g_pl, tmp_path, field):
+    """A record whose digest/fingerprint no longer matches (source or graph
+    changed since it was written) is rejected and the tuner re-measures."""
+    path = str(tmp_path / "tuned.json")
+    autotune(sssp_prog, g_pl, budget=4, seed=0, measure=fake_measure,
+             store=path)
+    _tamper(path, field, "0badc0ffee0badc0")
+
+    calls = []
+
+    def counting_measure(bound, params):
+        calls.append(1)
+        return fake_measure(bound, params)
+
+    r = autotune(sssp_prog, g_pl, budget=4, seed=0,
+                 measure=counting_measure, store=path)
+    assert not r.from_store and len(calls) == 4   # re-tuned, full sweep
+
+
+def test_corrupt_store_file_is_a_miss_not_a_crash(sssp_prog, g_pl, tmp_path):
+    """A truncated/hand-edited store file means "never tuned": the tuner
+    re-measures and the next save rewrites a clean file."""
+    path = str(tmp_path / "tuned.json")
+    with open(path, "w") as f:
+        f.write('{"version": 1, "records": [{"trunc')
+    r = autotune(sssp_prog, g_pl, budget=3, seed=0, measure=fake_measure,
+                 store=path)
+    assert not r.from_store and len(r.record.trials) == 3
+    assert len(TuningStore(path)) == 1   # clean file rewritten
+
+
+def test_invalid_stored_schedule_is_a_miss(sssp_prog, g_pl, tmp_path):
+    """A key-valid record whose schedule no longer validates (written by a
+    different Schedule version) is re-tuned, not raised."""
+    path = str(tmp_path / "tuned.json")
+    autotune(sssp_prog, g_pl, budget=3, seed=0, measure=fake_measure,
+             store=path)
+    _tamper(path, "schedule", {"direction": "sideways"})
+    r = autotune(sssp_prog, g_pl, budget=3, seed=0, measure=fake_measure,
+                 store=path)
+    assert not r.from_store and len(r.record.trials) == 3
+
+
+def test_different_graph_is_a_store_miss(sssp_prog, g_pl, tmp_path):
+    path = str(tmp_path / "tuned.json")
+    autotune(sssp_prog, g_pl, budget=4, seed=0, measure=fake_measure,
+             store=path)
+    g2 = preferential_attachment(300, m=5, seed=99)   # different contents
+    r = autotune(sssp_prog, g2, budget=4, seed=0, measure=fake_measure,
+                 store=path)
+    assert not r.from_store
+    store = TuningStore(path)
+    assert len(store) == 2   # both graphs now recorded side by side
+
+
+def test_fingerprint_is_content_addressed():
+    a = preferential_attachment(200, m=4, seed=5)
+    b = preferential_attachment(200, m=4, seed=5)
+    c = preferential_attachment(200, m=4, seed=6)
+    assert get_context(a).fingerprint() == get_context(b).fingerprint()
+    assert get_context(a).fingerprint() != get_context(c).fingerprint()
+
+
+def test_stats_shape(g_pl, g_road):
+    s = get_context(g_pl).stats()
+    for k in ("num_nodes", "avg_degree", "skew", "deg_cv", "probe_depth",
+              "probe_max_frontier_frac", "probe_growth", "probe_reach_frac"):
+        assert k in s, k
+    assert get_context(g_pl).stats() is s          # memoized
+    assert get_context(g_road).stats()["deg_cv"] < 0.3 < s["deg_cv"]
+
+
+def test_autotune_rejects_distributed(sssp_prog, g_pl):
+    prog = dataclasses.replace(sssp_prog, backend="distributed")
+    with pytest.raises(ValueError, match="distributed"):
+        autotune(prog, g_pl, budget=2, measure=fake_measure)
+
+
+def test_digest_stability():
+    src = "function f(Graph g) {}"
+    assert source_digest(src) == source_digest(src)
+    assert source_digest(src) != source_digest(src + " ")
