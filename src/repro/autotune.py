@@ -105,7 +105,8 @@ def _with_layout(base: Schedule, num_buckets: int, min_width: int,
 
 
 def search_space(stats: dict, base: Optional[Schedule] = None, *,
-                 tune_batch: bool = False) -> List[Schedule]:
+                 tune_batch: bool = False,
+                 backend: str = "local") -> List[Schedule]:
     """Candidate schedules for a graph with these statistics.
 
     Deterministic and pruned: the base schedule is always candidate #0
@@ -116,8 +117,16 @@ def search_space(stats: dict, base: Optional[Schedule] = None, *,
 
     `tune_batch=True` adds `batch_sources` variants (only meaningful for
     programs with a source-set loop; the caller knows from the IR).
+
+    `backend="distributed"` explores the distributed knob plane instead of
+    the single-device layout/kernel knobs: the frontier-exchange policy
+    (`dist_frontier` x `dist_gather_frac`), the relax/BFS `direction`, and
+    the source-batch width. The base (by default the dense-gather paper
+    schedule) stays candidate #0 there too.
     """
     base = Schedule() if base is None else base
+    if backend == "distributed":
+        return _dist_search_space(stats, base, tune_batch=tune_batch)
     cands: List[Schedule] = [base]
 
     skewed = (stats.get("deg_cv", 0.0) >= _SKEWED_CV
@@ -161,6 +170,48 @@ def search_space(stats: dict, base: Optional[Schedule] = None, *,
                 cands.append(base.replace(batch_sources=bs))
 
     # dedup, order-preserving (Schedule is hashable by design)
+    return _dedup(cands)
+
+
+def _dist_search_space(stats: dict, base: Schedule, *,
+                       tune_batch: bool = False) -> List[Schedule]:
+    """Distributed candidates: gather policy x direction x batch width.
+
+    The dense full-gather base comes first (nothing can measure worse than
+    the paper's scheme); the compact/auto exchange variants pay off when
+    frontiers stay small relative to `dist_gather_frac` x block, so the
+    always-sparse graphs also try a tighter buffer."""
+    cands: List[Schedule] = [base]
+    flat = stats.get("probe_max_frontier_frac", 1.0) <= _FLAT_FRONTIER
+
+    # ---- frontier-exchange policy ---------------------------------------
+    for pol in ("auto", "compact"):
+        cands.append(base.replace(dist_frontier=pol))
+    if flat:
+        # frontiers never grow: a tighter compact buffer still fits and
+        # halves the per-superstep volume again
+        cands.append(base.replace(dist_frontier="auto",
+                                  dist_gather_frac=1.0 / 16.0))
+    else:
+        cands.append(base.replace(dist_frontier="auto",
+                                  dist_gather_frac=3.0 / 8.0))
+
+    # ---- relax/BFS direction --------------------------------------------
+    for d in ("pull", "push"):
+        cands.append(base.replace(direction=d))
+    # the combination the volume model predicts: compressed exchange plus
+    # the combine-free pull superstep
+    cands.append(base.replace(dist_frontier="auto", direction="pull"))
+
+    # ---- source-batch width (programs with a set loop only) --------------
+    if tune_batch:
+        for bs in (0, 8, 64):
+            if bs != base.batch_sources:
+                cands.append(base.replace(batch_sources=bs))
+    return _dedup(cands)
+
+
+def _dedup(cands: List[Schedule]) -> List[Schedule]:
     seen, out = set(), []
     for c in cands:
         if c not in seen:
@@ -389,10 +440,6 @@ def autotune(prog: CompiledProgram, g, *, budget: int = 16, seed: int = 0,
         raise ValueError(
             "program has no dsl_source to recompile under candidate "
             "schedules (compile it via compile_program/compile_bundled)")
-    if prog.backend == "distributed":
-        raise ValueError(
-            "autotune supports the local and pallas backends; the "
-            "distributed codegen has no frontier/batching knobs to tune yet")
     ctx = get_context(g)
     digest = source_digest(prog.dsl_source)
     fingerprint = ctx.fingerprint()
@@ -413,7 +460,8 @@ def autotune(prog: CompiledProgram, g, *, budget: int = 16, seed: int = 0,
 
     stats = ctx.stats()
     cands = search_space(stats, base=prog.schedule,
-                         tune_batch=_has_set_param(prog))
+                         tune_batch=_has_set_param(prog),
+                         backend=prog.backend)
     if budget < 1:
         raise ValueError(f"budget must be >= 1, got {budget}")
     cands = cands[:budget]

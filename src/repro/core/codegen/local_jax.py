@@ -29,8 +29,7 @@ _RED = {"+": "+", "-": "-", "*": "*", "/": "/", "&&": "&", "||": "|"}
 class LocalCodegen:
     backend_name = "local"
     VLEN = "N"
-    # batched `forall(src in sourceSet)` lowering (Schedule.batch_sources);
-    # the distributed backend opts out (its properties are device-sharded)
+    # batched `forall(src in sourceSet)` lowering (Schedule.batch_sources)
     supports_source_batching = True
 
     def __init__(self, irfn: I.IRFunction, schedule: Optional[Schedule] = None,

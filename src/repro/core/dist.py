@@ -64,8 +64,11 @@ def run_pod_parallel(prog, g: CSRGraph, mesh, source_set, **params):
         kw = dict(zip(names, vs))
         kw[set_param] = srcs_
         out = body(gd_, **kw)
-        # sum per-pod contributions of every output property
-        return {k: (jax.lax.psum(v, "pod") if k in meta.get("out_props", ()) else v)
+        # sum per-pod contributions of every output property; the
+        # communication counter also diverges per pod (each pod ran its
+        # own source subset), so the reported volume is the pod total
+        summed = set(meta.get("out_props", ())) | {"_gather_elems"}
+        return {k: (jax.lax.psum(v, "pod") if k in summed else v)
                 for k, v in out.items()}
 
     out_specs = {v: P(rtd.AXIS) for v in meta.get("out_props", [])}

@@ -6,7 +6,10 @@ with the local minimum" §4.2). Here:
 
   * each device owns a contiguous vertex block (`own_ids`), the last block
     padded — exactly the paper's scheme;
-  * property exchange = `all_gather` (tiled) over the `data` axis;
+  * property exchange = `all_gather` (tiled) over the `data` axis, or the
+    frontier-compressed `exchange` (changed entries only, through fixed
+    per-shard buffers) when the compiled Schedule's `dist_frontier` policy
+    asks for it;
   * update combining = `pmin`/`psum` over scattered candidate arrays — the
     communication-aggregation optimization is the collective itself;
   * the fixed-point flag = a global OR (psum of local any()).
@@ -132,6 +135,97 @@ def gather(x):
     return jax.lax.all_gather(x, AXIS, tiled=True)
 
 
+def gather_rows(x):
+    """Batched property exchange: [S, B] lane blocks -> [S, N_pad] full rows
+    (all-gather along the vertex axis; lanes ride along)."""
+    return jax.lax.all_gather(x, AXIS, tiled=True, axis=1)
+
+
+def compact_cap(block: int, frac: float) -> int:
+    """Static per-shard compact-buffer capacity for a [block]-sized shard."""
+    return max(min(int(block * frac), block), 1)
+
+
+def exchange(full_prev, blk, own_ids, gather_frac: float = 0.25, *,
+             skip_empty: bool = True, _dense=None):
+    """Frontier-compressed BSP property exchange.
+
+    `full_prev` is the [N_pad] view every shard agreed on last superstep;
+    `blk` is this shard's current [B] block. Entries that differ are the
+    communication frontier. Three regimes, chosen per superstep on device
+    (the predicate is a collective scalar, so every shard branches the same
+    way — the Beamer direction switch, applied to communication volume):
+
+      * empty   — nothing changed anywhere: skip the collective entirely
+                  (only when `skip_empty`, the "auto" policy);
+      * compact — every shard's change count fits the fixed-size buffer
+                  (`cap = compact_cap(B, gather_frac)`): all-gather only
+                  (id, value) pairs and scatter them into `full_prev`,
+                  moving 2*cap*P elements instead of N_pad — the paper's
+                  §4.2 send-buffer aggregation, volume edition;
+      * dense   — overflow fallback: the classic full all-gather.
+
+    Returns `(full, gathered_elems)` where `gathered_elems` is the number
+    of elements this superstep actually moved (int32, on device). Padded
+    slots (own_ids >= num true nodes) are exchanged like any other only if
+    they change, which initialized-but-never-written padding never does —
+    so poison seeded into padding stays untouched (tested)."""
+    n_pad = full_prev.shape[0]
+    cap = compact_cap(blk.shape[0], gather_frac)
+    p = axis_size(AXIS)
+    chg = blk != full_prev[own_ids]
+    cnt = jnp.sum(chg.astype(jnp.int32))
+
+    def skip(_):
+        return full_prev, jnp.int32(0)
+
+    def dense(_):
+        # `_dense` overrides the fallback gather when the flat layout is a
+        # view of something an all-gather cannot reproduce by concatenation
+        # (the [S, B] lane blocks of `exchange_rows`)
+        return (gather(blk) if _dense is None else _dense()), jnp.int32(n_pad)
+
+    def compact(_):
+        order = jnp.argsort(~chg)            # stable: changed slots first
+        sel = order[:cap]
+        lane_ok = jnp.arange(cap) < cnt
+        # out-of-range ids mark the padding lanes; scatter drops them
+        ids = jnp.where(lane_ok, own_ids[sel], n_pad)
+        ids_all = jax.lax.all_gather(ids, AXIS, tiled=True)
+        vals_all = jax.lax.all_gather(blk[sel], AXIS, tiled=True)
+        return full_prev.at[ids_all].set(vals_all), jnp.int32(2 * cap * p)
+
+    if 2 * cap * p >= n_pad:   # compact cannot beat dense at this capacity
+        if not skip_empty:
+            return dense(None)
+        total = psum(cnt)
+        return jax.lax.cond(total == 0, skip, dense, 0)
+
+    worst = pmax(cnt)
+    fits = worst <= cap
+    if not skip_empty:
+        return jax.lax.cond(fits, compact, dense, 0)
+    total = psum(cnt)
+    return jax.lax.cond(
+        total == 0, skip,
+        lambda _: jax.lax.cond(fits, compact, dense, 0), 0)
+
+
+def exchange_rows(full_prev, blk, own_ids, gather_frac: float = 0.25, *,
+                  skip_empty: bool = True):
+    """Batched-lane `exchange`: full_prev [S, N_pad], blk [S, B]. Lanes are
+    flattened into one composite id space (lane * N_pad + vertex), so the
+    compact buffer is shared across lanes — a lane whose frontier emptied
+    donates its capacity to the others."""
+    s, n_pad = full_prev.shape
+    own2d = (jnp.arange(s, dtype=jnp.int32)[:, None] * n_pad
+             + own_ids[None, :]).reshape(-1)
+    full, elems = exchange(full_prev.reshape(-1), blk.reshape(-1), own2d,
+                           gather_frac, skip_empty=skip_empty,
+                           _dense=lambda: gather_rows(blk).reshape(-1))
+    return full.reshape(s, n_pad), elems
+
+
 def pmin(x):
     return jax.lax.pmin(x, AXIS)
 
@@ -169,31 +263,156 @@ def combine_scatter_max(n_pad: int, idx, cand, dtype):
     return pmax(buf.at[idx].max(cand))
 
 
+def combine_scatter_add_rows(n_pad: int, idx, vals, dtype):
+    """Batched-lane combine: vals [S, E] scattered by idx [E] into a
+    [S, n_pad] buffer, psum'd across shards (one combine for all lanes)."""
+    buf = jnp.zeros((vals.shape[0], n_pad), dtype)
+    return psum(buf.at[:, idx].add(vals))
+
+
+def dist_should_push(frontier_full, threshold_frac: float):
+    """Replicated-frontier occupancy test: True when the frontier is sparse
+    enough that a push superstep (scatter + global combine) beats the pull
+    form (local segment reduction over the gathered arrays). The input is
+    a full [N_pad] (or [S, N_pad]) mask every shard holds identically, so
+    the predicate is shard-uniform by construction."""
+    cap = max(int(frontier_full.size * threshold_frac), 1)
+    return jnp.sum(frontier_full.astype(jnp.int32)) <= jnp.int32(cap)
+
+
 # --------------------------------------------------------------------------
 # Distributed BFS (iterateInBFS construct)
 # --------------------------------------------------------------------------
 
-def bfs_levels_1d(esrc, edst, evalid, own_ids, root, n_pad: int):
-    """Level-synchronous distributed BFS over 1-D partitioned out-edges.
-    Returns (level_blk[int32 B], depth)."""
+def bfs_levels_1d(esrc, edst, evalid, isrc, idst_local, ivalid, own_ids,
+                  root, n_pad: int, *, frontier: str = "dense",
+                  gather_frac: float = 0.25, direction: str = "auto",
+                  threshold_frac: float = 1.0 / 16.0):
+    """Level-synchronous distributed BFS over the 1-D partition.
+
+    `frontier` is the Schedule's `dist_frontier` policy for the per-level
+    exchange of the level array (dense gather vs changed-entry compact
+    buffers); `direction` picks the expansion:
+
+      push — scatter reached-flags over out-edges of frontier vertices and
+             combine globally (a psum over [N_pad], the paper's scheme);
+      pull — each shard segment-reduces over its *in*-edge partition from
+             the replicated level array: no combine collective at all;
+      auto — per-level Beamer switch on frontier occupancy against
+             `threshold_frac` (shard-uniform: the frontier is replicated).
+
+    Both directions mark exactly the unseen out-neighborhood of the
+    frontier, so the choice never changes results. Returns
+    (level_blk int32[B], depth, gathered_elems) — the element counter is
+    f32 (exact to 2^24; int64 is unavailable under default jax config and
+    int32 would wrap on deep large-N runs)."""
+    B = own_ids.shape[0]
     level0 = jnp.where(own_ids == root, 0, -1).astype(jnp.int32)
+    full0 = gather(level0)
 
     def cond(state):
-        return state[2]
+        return state[3]
 
     def body(state):
-        level_blk, cur, _ = state
-        level_full = gather(level_blk)
-        src_on = (level_full[esrc] == cur) & evalid
-        unseen = level_full[edst] < 0
-        reach = combine_scatter_add(n_pad, edst, (src_on & unseen).astype(jnp.int32), jnp.int32)
-        newly = (reach[own_ids] > 0) & (level_blk < 0)
-        level_blk = jnp.where(newly, cur + 1, level_blk)
-        return level_blk, cur + 1, any_global(newly)
+        level_blk, level_full, cur, _, elems = state
 
-    level, depth, _ = jax.lax.while_loop(
-        cond, body, (level0, jnp.int32(0), jnp.bool_(True)))
-    return level, depth
+        def push(_):
+            src_on = (level_full[esrc] == cur) & evalid
+            unseen = level_full[edst] < 0
+            reach = combine_scatter_add(
+                n_pad, edst, (src_on & unseen).astype(jnp.int32), jnp.int32)
+            return reach[own_ids] > 0
+
+        def pull(_):
+            on = (level_full[isrc] == cur) & ivalid
+            return rt.segment_max(on.astype(jnp.int32), idst_local, B,
+                                  sorted_ids=False) > 0
+
+        if direction == "push":
+            reach_blk = push(0)
+        elif direction == "pull":
+            reach_blk = pull(0)
+        else:
+            reach_blk = jax.lax.cond(
+                dist_should_push(level_full == cur, threshold_frac),
+                push, pull, 0)
+        newly = reach_blk & (level_blk < 0)
+        level_blk = jnp.where(newly, cur + 1, level_blk)
+        if frontier == "dense":
+            level_full = gather(level_blk)
+            elems = elems + jnp.int32(n_pad)
+        else:
+            level_full, step = exchange(level_full, level_blk, own_ids,
+                                        gather_frac,
+                                        skip_empty=(frontier == "auto"))
+            elems = elems + step
+        return level_blk, level_full, cur + 1, any_global(newly), elems
+
+    level, _, depth, _, elems = jax.lax.while_loop(
+        cond, body,
+        (level0, full0, jnp.int32(0), jnp.bool_(True), jnp.float32(n_pad)))
+    return level, depth, elems
+
+
+def bfs_levels_1d_batch(esrc, edst, evalid, isrc, idst_local, ivalid,
+                        own_ids, roots, n_pad: int, *,
+                        frontier: str = "dense", gather_frac: float = 0.25,
+                        direction: str = "auto",
+                        threshold_frac: float = 1.0 / 16.0):
+    """Batched `bfs_levels_1d`: one BSP loop serves all S roots. State is
+    [S, B] per shard / [S, N_pad] replicated; the per-level exchange moves
+    all lanes' frontiers through one shared compact buffer. `direction` is
+    chosen once per level for the whole batch (the occupancy test sums over
+    lanes). Returns (level_blk int32[S, B], depth, gathered_elems); depth
+    is the deepest lane's level count — shallower lanes simply see empty
+    frontiers at the tail levels, exactly like the local batch engine."""
+    B = own_ids.shape[0]
+    level0 = jnp.where(own_ids[None, :] == roots[:, None], 0, -1).astype(jnp.int32)
+    full0 = gather_rows(level0)
+
+    def cond(state):
+        return state[3]
+
+    def body(state):
+        level_blk, level_full, cur, _, elems = state
+
+        def push(_):
+            src_on = (level_full[:, esrc] == cur) & evalid
+            unseen = level_full[:, edst] < 0
+            reach = combine_scatter_add_rows(
+                n_pad, edst, (src_on & unseen).astype(jnp.int32), jnp.int32)
+            return reach[:, own_ids] > 0
+
+        def pull(_):
+            on = (level_full[:, isrc] == cur) & ivalid
+            return rt.segment_max_batch(on.astype(jnp.int32), idst_local, B,
+                                        sorted_ids=False) > 0
+
+        if direction == "push":
+            reach_blk = push(0)
+        elif direction == "pull":
+            reach_blk = pull(0)
+        else:
+            reach_blk = jax.lax.cond(
+                dist_should_push(level_full == cur, threshold_frac),
+                push, pull, 0)
+        newly = reach_blk & (level_blk < 0)
+        level_blk = jnp.where(newly, cur + 1, level_blk)
+        if frontier == "dense":
+            level_full = gather_rows(level_blk)
+            elems = elems + jnp.int32(level_full.size)
+        else:
+            level_full, step = exchange_rows(level_full, level_blk, own_ids,
+                                             gather_frac,
+                                             skip_empty=(frontier == "auto"))
+            elems = elems + step
+        return level_blk, level_full, cur + 1, any_global(newly), elems
+
+    level, _, depth, _, elems = jax.lax.while_loop(
+        cond, body,
+        (level0, full0, jnp.int32(0), jnp.bool_(True),
+         jnp.float32(full0.size)))
+    return level, depth, elems
 
 
 # --------------------------------------------------------------------------

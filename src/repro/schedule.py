@@ -37,6 +37,7 @@ import numbers
 LANE_MULTIPLE = 8
 
 _DIRECTIONS = ("auto", "push", "pull")
+_DIST_FRONTIERS = ("dense", "compact", "auto")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -74,6 +75,24 @@ class Schedule:
         divides the bucket's (8-aligned) row count. Narrow buckets amortize
         grid-step overhead with tall blocks; wide buckets may need short
         blocks to fit their ``block * width`` tile in VMEM.
+    dist_frontier:
+        BSP property-exchange policy of the distributed backend.
+        ``"dense"`` all-gathers the full property arrays every superstep
+        (the paper's scheme, and the conservative baseline the autotuner
+        starts from). ``"compact"`` exchanges only the entries that changed
+        since the last superstep through fixed-size per-shard buffers,
+        falling back to a full gather whenever any shard's change count
+        overflows its buffer. ``"auto"`` is ``"compact"`` plus an
+        empty-frontier fast path: when no entry changed anywhere, the
+        collective is skipped entirely. All three policies exchange the
+        same values, so the choice never changes results — only
+        communication volume.
+    dist_gather_frac:
+        Per-shard capacity of the compact exchange buffer, as a fraction of
+        the shard's vertex block (in [0, 1]). A compact superstep moves
+        ``2 * cap * num_shards`` elements (ids + values) instead of the
+        dense ``N_pad``, so fractions >= 0.5 cannot beat the dense gather
+        and the exchange statically degrades to ``"dense"`` there.
     """
 
     num_buckets: int = 4
@@ -83,6 +102,8 @@ class Schedule:
     batch_sources: int = 32
     direction: str = "auto"
     block_rows: object = 256   # int (uniform) or tuple of per-bucket caps
+    dist_frontier: str = "dense"
+    dist_gather_frac: float = 0.25
 
     def __post_init__(self):
         set_ = lambda k, v: object.__setattr__(self, k, v)  # noqa: E731 (frozen)
@@ -126,10 +147,28 @@ class Schedule:
             raise ValueError(
                 f"Schedule.batch_sources must be >= 0, got "
                 f"{self.batch_sources} (0 or 1 disables source batching)")
+        # normalize str subclasses (np.str_ from sweep code) to plain str:
+        # these values are baked into generated source via repr()
+        if isinstance(self.direction, str):
+            set_("direction", str(self.direction))
         if self.direction not in _DIRECTIONS:
             raise ValueError(
                 f"Schedule.direction must be one of {_DIRECTIONS}, got "
                 f"{self.direction!r}")
+        if isinstance(self.dist_frontier, str):
+            set_("dist_frontier", str(self.dist_frontier))
+        if self.dist_frontier not in _DIST_FRONTIERS:
+            raise ValueError(
+                f"Schedule.dist_frontier must be one of {_DIST_FRONTIERS}, "
+                f"got {self.dist_frontier!r}")
+        gfrac = self.dist_gather_frac
+        if isinstance(gfrac, numbers.Real) and not isinstance(gfrac, bool):
+            set_("dist_gather_frac", float(gfrac))
+        if not isinstance(self.dist_gather_frac, float) or \
+                not 0.0 <= self.dist_gather_frac <= 1.0:
+            raise ValueError(
+                "Schedule.dist_gather_frac must be a fraction of the shard "
+                f"block in [0, 1], got {self.dist_gather_frac!r}")
         br = self.block_rows
         if isinstance(br, (list, tuple)):
             br = tuple(br)

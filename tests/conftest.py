@@ -1,12 +1,32 @@
 import os
 import sys
 
-# tests see ONE device (the dry-run pins 512 in its own process only)
+# The whole suite runs under 8 forced host devices so the distributed
+# backend's shard matrix (tests/test_dist_agree.py, test_distributed.py)
+# executes in-process — real collectives over a real multi-device mesh,
+# not a subprocess bottleneck. This must happen before jax initializes
+# its backends, i.e. before the repro imports below.
+_FLAG = "--xla_force_host_platform_device_count=8"
+if "xla_force_host_platform_device_count" not in os.environ.get("XLA_FLAGS", ""):
+    os.environ["XLA_FLAGS"] = f"{os.environ.get('XLA_FLAGS', '')} {_FLAG}".strip()
+
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 import pytest
 
 from repro.graph import road, small_world, uniform_random
+
+
+@pytest.fixture(scope="session")
+def eight_devices():
+    """Assert the forced 8-device host platform actually took effect (it
+    fails if jax was initialized before this conftest ran)."""
+    import jax
+    devs = jax.devices()
+    assert len(devs) >= 8, (
+        f"expected >= 8 forced host devices, found {len(devs)}; was jax "
+        "imported before conftest set XLA_FLAGS?")
+    return devs
 
 
 @pytest.fixture(scope="session")

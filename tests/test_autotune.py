@@ -6,7 +6,6 @@ contract under test is that everything *around* the measurement —
 candidate derivation, trial order, truncation, tie-breaking, record
 contents — is exactly reproducible given (graph, seed, budget).
 """
-import dataclasses
 import json
 
 import numpy as np
@@ -269,10 +268,37 @@ def test_stats_shape(g_pl, g_road):
     assert get_context(g_road).stats()["deg_cv"] < 0.3 < s["deg_cv"]
 
 
-def test_autotune_rejects_distributed(sssp_prog, g_pl):
-    prog = dataclasses.replace(sssp_prog, backend="distributed")
-    with pytest.raises(ValueError, match="distributed"):
-        autotune(prog, g_pl, budget=2, measure=fake_measure)
+# --------------------------------------------------------------------------
+# distributed backend (exclusion removed in the frontier-aware dist PR)
+# --------------------------------------------------------------------------
+
+def test_search_space_distributed_candidates(g_pl):
+    stats = get_context(g_pl).stats()
+    cands = search_space(stats, backend="distributed")
+    # the dense-gather base is always trial #0 (never measured-worse)
+    assert cands[0] == Schedule()
+    assert cands[0].dist_frontier == "dense"
+    assert len(cands) == len(set(cands))
+    assert any(c.dist_frontier == "auto" for c in cands)
+    assert any(c.dist_frontier == "compact" for c in cands)
+    assert any(c.direction == "pull" for c in cands)
+    # the single-device layout/kernel knobs are not the dist plane
+    assert all(c.layout_key() == Schedule().layout_key() for c in cands)
+    with_batch = search_space(stats, backend="distributed", tune_batch=True)
+    assert any(c.batch_sources != Schedule().batch_sources
+               for c in with_batch)
+
+
+def test_autotune_distributed_runs_and_stays_correct(g_pl, eight_devices):
+    from repro.graph.algorithms_ref import sssp_ref
+    prog = compile_bundled("sssp", backend="distributed")
+    r = autotune(prog, g_pl, budget=4, seed=0, measure=fake_measure)
+    assert r.record.backend == "distributed"
+    assert len(r.record.trials) == 4
+    assert r.record.trials[0]["schedule"]["dist_frontier"] == "dense"
+    assert r.record.best_ms <= r.record.default_ms
+    out = np.asarray(r.program.bind(g_pl)(src=0)["dist"])
+    assert np.array_equal(out, sssp_ref(g_pl, 0).astype(np.int32))
 
 
 def test_digest_stability():

@@ -1,0 +1,99 @@
+"""Multi-shard agreement matrix: every bundled program, distributed vs
+local, across shard counts {1, 2, 4, 8} — in-process, on the 8 forced host
+devices the shared conftest sets up.
+
+N is prime (101), so no shard count > 1 divides it: every mesh in the
+matrix exercises the padded last block. The distributed runs use the
+frontier-compressed "auto" exchange policy (the new path); the dense
+baseline is pinned against the same references in test_distributed.py,
+and dense-vs-compact equivalence per schedule is covered by the
+hypothesis test in test_property.py.
+"""
+import numpy as np
+import pytest
+
+from repro.core import Schedule, compile_bundled, dist
+
+PROGRAMS = ["sssp", "sssp_pull", "pr", "tc", "bc", "cc"]
+SHARDS = [1, 2, 4, 8]
+
+# the distributed schedule under test: compressed exchange + adaptive
+# direction — every new knob on at once
+DIST_SCHED = Schedule(dist_frontier="auto", direction="auto")
+
+
+def _params(name, g):
+    if name in ("sssp", "sssp_pull"):
+        return dict(src=0)
+    if name == "pr":
+        return dict(beta=1e-4, delta=0.85, maxIter=60)
+    if name == "bc":
+        return dict(sourceSet=np.array([0, 7, 23], np.int32))
+    return {}
+
+
+_OUT_KEY = {"sssp": "dist", "sssp_pull": "dist", "pr": "pageRank",
+            "tc": "triangle_count", "bc": "BC", "cc": "comp"}
+
+
+@pytest.fixture(scope="module")
+def g_prime(eight_devices):
+    from repro.graph import uniform_random
+    return uniform_random(101, 5, seed=2)
+
+
+@pytest.fixture(scope="module")
+def local_refs(g_prime):
+    """One local-backend run per program — the agreement oracle."""
+    refs = {}
+    for name in PROGRAMS:
+        prog = compile_bundled(name, backend="local")
+        refs[name] = np.asarray(
+            prog(g_prime, **_params(name, g_prime))[_OUT_KEY[name]])
+    return refs
+
+
+@pytest.mark.parametrize("shards", SHARDS)
+@pytest.mark.parametrize("name", PROGRAMS)
+def test_distributed_agrees_with_local(name, shards, g_prime, local_refs):
+    prog = compile_bundled(name, backend="distributed", schedule=DIST_SCHED)
+    mesh = dist.make_mesh_1d(shards)
+    out = np.asarray(prog.bind(g_prime, mesh=mesh)(
+        **_params(name, g_prime))[_OUT_KEY[name]])
+    ref = local_refs[name]
+    if ref.dtype.kind == "f":
+        np.testing.assert_allclose(out, ref, rtol=1e-4, atol=1e-4,
+                                   err_msg=f"{name} @ {shards} shards")
+    else:
+        assert np.array_equal(out, ref), f"{name} @ {shards} shards"
+
+
+def test_context_owns_per_shard_partition_views(g_prime):
+    """One graph serves every mesh in the matrix through its single
+    GraphContext: the 1-D partitions are memoized per shard count, so
+    binding the same (program, shard count) twice builds nothing new."""
+    from repro.core import get_context
+    prog = compile_bundled("sssp", backend="distributed", schedule=DIST_SCHED)
+    for shards in SHARDS:
+        prog.bind(g_prime, mesh=dist.make_mesh_1d(shards))
+    ctx = get_context(g_prime)
+    keys = {k[1] for k in ctx.view_keys() if k[0] == "dist_1d"}
+    assert set(SHARDS) <= keys
+    before = len(ctx.view_keys())
+    prog.bind(g_prime, mesh=dist.make_mesh_1d(4))   # memoized: no new views
+    assert len(ctx.view_keys()) == before
+
+
+def test_comm_volume_counter_monotone_in_policy(g_prime):
+    """The generated `_gather_elems` counter: the compressed policies never
+    move MORE property-exchange elements than the dense baseline, and the
+    empty-skip ("auto") never more than plain compact."""
+    mesh = dist.make_mesh_1d(8)
+    elems = {}
+    for pol in ("dense", "compact", "auto"):
+        prog = compile_bundled("sssp", backend="distributed",
+                               schedule=Schedule(dist_frontier=pol))
+        elems[pol] = int(prog.bind(g_prime, mesh=mesh)(src=0)["_gather_elems"])
+    assert elems["compact"] <= elems["dense"]
+    assert elems["auto"] <= elems["compact"]
+    assert elems["auto"] < elems["dense"], elems

@@ -57,13 +57,38 @@ def test_compile_cache_keys_on_schedule_and_backend():
 
 
 def test_same_schedule_byte_identical_source():
-    for backend in ["local", "pallas"]:
+    for backend in ["local", "pallas", "distributed"]:
         compile_cache_clear()
         a = compile_bundled("bc", backend=backend, schedule=Schedule())
         compile_cache_clear()
         b = compile_bundled("bc", backend=backend, schedule=Schedule())
         assert a is not b              # genuinely recompiled...
         assert a.source == b.source    # ...to byte-identical source
+
+
+def test_distributed_knobs_are_source_literals():
+    """The distributed codegen consumes the Schedule as literals: distinct
+    dist knobs produce distinct source, and the policy strings are visible
+    in the generated text (the PR-3 contract, extended to the third
+    backend)."""
+    base = compile_bundled("sssp", backend="distributed",
+                           schedule=Schedule())
+    comp = compile_bundled("sssp", backend="distributed",
+                           schedule=Schedule(dist_frontier="auto",
+                                             dist_gather_frac=1 / 8))
+    pull = compile_bundled("sssp", backend="distributed",
+                           schedule=Schedule(direction="pull"))
+    assert len({base.source, comp.source, pull.source}) == 3
+    assert "rtd.exchange" in comp.source
+    assert "rtd.exchange" not in base.source       # dense: plain gathers
+    assert "0.125" in comp.source                  # the gather_frac literal
+    # batched distributed source lanes are schedule-driven too
+    bseq = compile_bundled("bc", backend="distributed",
+                           schedule=Schedule(batch_sources=0))
+    bbat = compile_bundled("bc", backend="distributed",
+                           schedule=Schedule(batch_sources=4))
+    assert "rtd.bfs_levels_1d_batch" in bbat.source
+    assert "rtd.bfs_levels_1d_batch" not in bseq.source
 
 
 # --- schedules coexist --------------------------------------------------------
@@ -131,6 +156,19 @@ def test_engine_mutation_after_compile_is_inert(g_pl, engine_guard):
     assert "1.0" in fresh.source
 
 
+def test_engine_mutation_inert_on_distributed(g_pl, engine_guard):
+    """Post-compile ENGINE mutation must stay inert on the distributed
+    backend too — its knobs are baked literals like the other backends'."""
+    from repro.graph.algorithms_ref import sssp_ref
+    prog = compile_bundled("sssp", backend="distributed")
+    src_before = prog.source
+    with pytest.warns(DeprecationWarning):
+        ENGINE.push_threshold_frac = 1.0
+    assert prog.source == src_before
+    out = np.asarray(prog.bind(g_pl)(src=0)["dist"])
+    assert np.array_equal(out, sssp_ref(g_pl, 0).astype(np.int32))
+
+
 def test_engine_shim_validates_before_committing(engine_guard):
     with pytest.raises(ValueError, match="growth"):
         ENGINE.growth = 1
@@ -150,6 +188,9 @@ def test_engine_shim_validates_before_committing(engine_guard):
     (dict(push_threshold_frac=-0.1), "push_threshold_frac"),
     (dict(batch_sources=-1), "batch_sources"),
     (dict(direction="sideways"), "direction"),
+    (dict(dist_frontier="sparse"), "dist_frontier"),
+    (dict(dist_gather_frac=1.5), "dist_gather_frac"),
+    (dict(dist_gather_frac=-0.1), "dist_gather_frac"),
 ])
 def test_schedule_validation_is_actionable(bad, match):
     with pytest.raises(ValueError, match=match):
