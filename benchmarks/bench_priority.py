@@ -1,0 +1,218 @@
+"""Delta-stepping SSSP benchmark: `Schedule.priority` on weighted grids.
+
+Compares the monotonic Min-relax lowering (`priority="none"`) against the
+delta-stepping lowering (`priority="delta"`, several bucket widths) on the
+suite's road-grid family — high diameter, uniform weights in [1, 100] —
+where bucketing the frontier by tentative distance pays.
+
+Three work metrics come from a host-side numpy replay of the exact
+lowered iteration rules, plus measured wall-clock:
+
+  * ``relax_sweeps`` — fixedPoint loop trips (one frontier relaxation
+    each). The monotonic loop runs exactly hop-diameter + 1 trips; the
+    delta loop re-sweeps inside a bucket until it settles, so it can trip
+    MORE while touching far fewer edges per trip.
+  * ``bucket_phases`` — distinct priority buckets processed (delta only;
+    reported as == sweeps for the monotonic baseline). This is the
+    superstep count a distributed run pays collectives for per bucket.
+  * ``edges_relaxed`` — total frontier out-edges relaxed across the run:
+    the actual work. Monotonic relaxation re-relaxes every vertex whose
+    tentative distance later improves; delta-stepping settles a bucket
+    before expanding past it, so far fewer corrections happen.
+
+The replay's final distances are asserted identical to the compiled
+program's output for every (priority, delta_bucket) point, and the
+autotuner is run on each graph to confirm it selects (or measures
+no-worse-than) a delta schedule on this family.
+
+    PYTHONPATH=src python benchmarks/bench_priority.py [--tiny]
+
+Emits BENCH_priority.json at the repo root (full run only).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+import numpy as np
+
+sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
+from common import timeit as _timeit_us  # noqa: E402
+from common import weighted_grid  # noqa: E402
+
+from repro.autotune import autotune  # noqa: E402
+from repro.core import Schedule, compile_bundled  # noqa: E402
+from repro.core.context import get_context  # noqa: E402
+
+OUT_PATH = os.path.join(os.path.dirname(__file__), "..", "BENCH_priority.json")
+INF = np.int64(2**30)
+
+
+# --------------------------------------------------------------------------
+# host-side replay of the two lowered fixedPoint iteration rules
+# --------------------------------------------------------------------------
+
+def _edge_arrays(g):
+    return (np.asarray(g.edge_src), np.asarray(g.indices),
+            np.asarray(g.weights).astype(np.int64))
+
+
+def replay_monotonic(g, src):
+    """The priority="none" lowering: frontier = every vertex modified last
+    sweep; relax all its out-edges; repeat until no distance improves."""
+    esrc, edst, w = _edge_arrays(g)
+    dist = np.full(g.num_nodes, INF)
+    dist[src] = 0
+    mod = np.zeros(g.num_nodes, bool)
+    mod[src] = True
+    sweeps = edges = 0
+    while mod.any():
+        on = mod[esrc]
+        nd = dist.copy()
+        np.minimum.at(nd, edst[on], dist[esrc[on]] + w[on])
+        edges += int(on.sum())
+        mod = nd < dist
+        dist = nd
+        sweeps += 1
+    return dist, {"relax_sweeps": sweeps, "bucket_phases": sweeps,
+                  "edges_relaxed": edges}
+
+
+def replay_delta(g, src, delta):
+    """The priority="delta" lowering: per trip, advance the bucket if no
+    pending vertex falls under its upper bound, take the in-window slice
+    as the frontier, relax it, and carry the out-of-window rest."""
+    esrc, edst, w = _edge_arrays(g)
+    dist = np.full(g.num_nodes, INF)
+    dist[src] = 0
+    mod = np.zeros(g.num_nodes, bool)
+    mod[src] = True
+    bk = 0
+    sweeps = phases = edges = 0
+    last_bk = -1
+    while mod.any():
+        if not (mod & (dist < (bk + 1) * delta)).any():
+            bk = int(dist[mod].min()) // delta
+        if bk != last_bk:
+            phases += 1
+            last_bk = bk
+        fr = mod & (dist < (bk + 1) * delta)
+        keep = mod & ~fr
+        on = fr[esrc]
+        nd = dist.copy()
+        np.minimum.at(nd, edst[on], dist[esrc[on]] + w[on])
+        edges += int(on.sum())
+        mod = (nd < dist) | keep
+        dist = nd
+        sweeps += 1
+    return dist, {"relax_sweeps": sweeps, "bucket_phases": phases,
+                  "edges_relaxed": edges}
+
+
+# --------------------------------------------------------------------------
+# the measured side
+# --------------------------------------------------------------------------
+
+def bench_family(name, g, src, reps, results):
+    stats = get_context(g).stats()
+    avg_w = max(stats["avg_weight"], 1.0)
+    deltas = [max(int(avg_w * m), 1) for m in (4, 16, 64)]
+    fam = {"num_nodes": g.num_nodes, "num_edges": g.num_edges,
+           "avg_weight": stats["avg_weight"], "variants": {}}
+
+    ref = None
+    for label, sched in [("none", Schedule())] + [
+            (f"delta/{d}", Schedule(priority="delta", delta_bucket=d))
+            for d in deltas]:
+        prog = compile_bundled("sssp", backend="local", schedule=sched)
+        bound = prog.bind(g)
+        us, out = _timeit_us(lambda: bound(src=src), reps=reps)
+        dist = np.asarray(out["dist"])
+        if ref is None:
+            ref = dist
+        assert np.array_equal(dist, ref), f"{name}/{label}: wrong distances"
+
+        if sched.priority == "delta":
+            rdist, work = replay_delta(g, src, sched.delta_bucket)
+        else:
+            rdist, work = replay_monotonic(g, src)
+        assert np.array_equal(
+            np.where(dist >= INF, INF, dist.astype(np.int64)), rdist), \
+            f"{name}/{label}: replay disagrees with the compiled program"
+
+        fam["variants"][label] = {"wall_ms": round(us / 1e3, 3), **work}
+        print(f"[{name}] {label:10s} wall={us / 1e3:8.2f}ms"
+              f"  sweeps={work['relax_sweeps']:4d}"
+              f"  phases={work['bucket_phases']:4d}"
+              f"  edges_relaxed={work['edges_relaxed']}")
+
+    base = fam["variants"]["none"]
+    best_label = min(
+        (k for k in fam["variants"] if k != "none"),
+        key=lambda k: fam["variants"][k]["wall_ms"])
+    best = fam["variants"][best_label]
+    fam["best_delta"] = best_label
+    fam["speedup_wall"] = round(base["wall_ms"] / best["wall_ms"], 3)
+    fam["phase_ratio"] = round(
+        base["bucket_phases"] / best["bucket_phases"], 2)
+    fam["edges_ratio"] = round(
+        base["edges_relaxed"] / best["edges_relaxed"], 2)
+
+    # --- does the autotuner find this on its own? ------------------------
+    prog = compile_bundled("sssp", backend="local")
+    res = autotune(prog, g, budget=12, params={"src": src}, reps=reps)
+    tuned_delta = res.schedule.priority == "delta"
+    fam["autotune"] = {
+        "selected_priority": res.schedule.priority,
+        "selected_delta_bucket": res.schedule.delta_bucket,
+        "speedup_vs_default": round(res.speedup, 3),
+    }
+    print(f"[{name}] autotune -> priority={res.schedule.priority!r} "
+          f"delta_bucket={res.schedule.delta_bucket} "
+          f"speedup={res.speedup:.2f}x")
+    # acceptance: the tuner either picks delta or measured it no faster
+    assert tuned_delta or res.speedup >= 1.0
+    results["families"][name] = fam
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--tiny", action="store_true",
+                    help="CI-sized graph + reps (no JSON emitted)")
+    args = ap.parse_args()
+
+    if args.tiny:
+        fams = {"grid24": weighted_grid(24, seed=7)}
+        reps = 1
+    else:
+        fams = {"grid96": weighted_grid(96, seed=7),
+                "grid64": weighted_grid(64, seed=8)}
+        reps = 3
+
+    results = {
+        "config": {"tiny": args.tiny, "reps": reps},
+        "note": ("relax_sweeps/bucket_phases/edges_relaxed come from a "
+                 "host-side replay of the lowered iteration rules, "
+                 "asserted bit-identical to the compiled program's "
+                 "distances. The monotonic baseline needs hop-diameter+1 "
+                 "sweeps; delta-stepping trades a few extra in-bucket "
+                 "sweeps for far fewer corrected (re-relaxed) edges."),
+        "families": {}}
+    for name, g in fams.items():
+        bench_family(name, g, src=0, reps=reps, results=results)
+
+    for name, fam in results["families"].items():
+        print(f"{name}: delta best={fam['best_delta']} "
+              f"wall x{fam['speedup_wall']}  "
+              f"phases x{fam['phase_ratio']}  "
+              f"edges x{fam['edges_ratio']} vs monotonic")
+    if not args.tiny:
+        with open(OUT_PATH, "w") as f:
+            json.dump(results, f, indent=2)
+        print(f"wrote {os.path.normpath(OUT_PATH)}")
+
+
+if __name__ == "__main__":
+    main()

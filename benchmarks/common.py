@@ -40,3 +40,24 @@ def suite():
     if _SUITE is None:
         _SUITE = load_suite()
     return _SUITE
+
+
+def weighted_grid(side, seed=0, weight_scale=1):
+    """side x side road grid with edge weights multiplied by `weight_scale`.
+
+    The delta-stepping benchmark family: high diameter plus a wide weight
+    range means many distinct tentative distances per hop, which is where
+    bucketing the frontier by distance pays off. `weight_scale=1` is the
+    suite's `road` graph unchanged."""
+    import numpy as np
+
+    from repro.graph.csr import from_edges
+    from repro.graph.generators import road
+
+    g = road(side, seed=seed)
+    if weight_scale == 1:
+        return g
+    # road() already symmetrized the edge list, so rebuild directed as-is
+    return from_edges(g.num_nodes, np.asarray(g.edge_src),
+                      np.asarray(g.indices),
+                      np.asarray(g.weights) * int(weight_scale))

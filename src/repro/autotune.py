@@ -63,6 +63,8 @@ RECORD_VERSION = 1
 _SKEWED_CV = 0.5          # degree CV above this = power-law-like
 _SKEWED_MAX_RATIO = 4.0   # max_degree / avg_degree above this = hubby
 _FLAT_FRONTIER = 1.0 / 16.0  # peak frontier frac below this = always-sparse
+_DEEP_PROBE = 32          # BFS probe depth at/over this = high-diameter
+#                           (road-like) graph: delta-stepping candidates on
 
 
 def source_digest(source: str) -> str:
@@ -158,6 +160,18 @@ def search_space(stats: dict, base: Optional[Schedule] = None, *,
             cands.append(base.replace(direction="auto",
                                       push_threshold_frac=frac))
 
+    # ---- priority policy (delta-stepping) ------------------------------
+    # only worth measuring on high-diameter weighted graphs (road/grid):
+    # there the monotonic relax runs hundreds of near-empty sweeps that a
+    # bucketed frontier turns into a handful of compact-relax phases. The
+    # candidate bucket widths are multiples of the mean edge weight — a
+    # bucket then spans roughly that many relaxed hops.
+    avg_w = stats.get("avg_weight", 0.0)
+    if stats.get("probe_depth", 0) >= _DEEP_PROBE and avg_w > 0:
+        for mult in (16, 64):
+            cands.append(base.replace(priority="delta",
+                                      delta_bucket=max(int(avg_w * mult), 1)))
+
     # ---- kernel row-block caps (pallas buckets) ------------------------
     for br in (64, 1024):
         if br != base.block_rows:
@@ -202,6 +216,13 @@ def _dist_search_space(stats: dict, base: Schedule, *,
     # the combination the volume model predicts: compressed exchange plus
     # the combine-free pull superstep
     cands.append(base.replace(dist_frontier="auto", direction="pull"))
+
+    # ---- priority policy (delta-stepping + priority-sliced exchange) ----
+    avg_w = stats.get("avg_weight", 0.0)
+    if stats.get("probe_depth", 0) >= _DEEP_PROBE and avg_w > 0:
+        cands.append(base.replace(priority="delta",
+                                  delta_bucket=max(int(avg_w * 16), 1),
+                                  dist_frontier="auto"))
 
     # ---- source-batch width (programs with a set loop only) --------------
     if tune_batch:

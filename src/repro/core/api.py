@@ -104,6 +104,8 @@ class BoundProgram:
             self.mesh = None
             if program.backend == "pallas":
                 ctx.sliced_ell(program.schedule, reverse=True)
+            elif program.backend == "local" and ", _dell" in program.source:
+                ctx.delta_ell()   # warm the delta-stepping compact-relax view
 
     def __call__(self, **params):
         prog = self.program
@@ -207,6 +209,15 @@ def compile_program(source: str, backend: str = "local",
             # with every other program compiled under the same layout.
             ell = get_context(g).sliced_ell(_sched, reverse=True)
             return _jitted(g, ell, **kw)
+    elif backend == "local" and \
+            f"def {irfn.name}({irfn.graph_param}, _dell" in body:
+        # delta-stepping program: the generated function takes the padded
+        # forward-ELL view its compact bucket relax gathers frontier
+        # out-rows from (None on hub-heavy graphs → dense fallback)
+        jitted = jax.jit(raw) if jit else raw
+
+        def fn(g, *, _jitted=jitted, **kw):
+            return _jitted(g, get_context(g).delta_ell(), **kw)
     else:
         fn = jax.jit(raw) if jit and backend == "local" else raw
     prog = CompiledProgram(

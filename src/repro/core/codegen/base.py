@@ -155,6 +155,20 @@ def prop_plus_weight(cand, other_side: str):
     return None
 
 
+def relax_candidate(cand, other_side: str):
+    """Match a Min-relax candidate contributed by `other_side`: either
+    `<other>.prop + e.weight` (the weighted SSSP relax) or a bare
+    `<other>.prop` (the unweighted relax — CC's component min). Returns
+    (prop, weighted) or None; both shapes route through the same push/pull
+    frontier machinery, the unweighted one simply drops the `+ w` term."""
+    p = prop_plus_weight(cand, other_side)
+    if p is not None:
+        return p, True
+    if isinstance(cand, I.IProp) and cand.target == other_side:
+        return cand.prop, False
+    return None
+
+
 def pure_vertex_predicate(expr, side: str) -> bool:
     """True if `expr` reads only <side>.prop, constants, and host scalars —
     i.e. it can be evaluated once as an [N] vertex mask instead of per edge.

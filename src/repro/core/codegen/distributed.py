@@ -26,6 +26,13 @@ byte-identical source):
     combine — §4.2 aggregation) vs pull (a purely local segment reduction
     over the shard's in-edge partition), switched per superstep by the
     replicated frontier's occupancy when "auto".
+  * `priority="delta"` lowers the monotonic Min-relax fixedPoint to
+    delta-stepping: the frontier becomes the current bucket window
+    (`delta_bucket` wide; bucket advance = global any/min collectives over
+    the blocks), and the value prop's changed-entry exchange is
+    priority-SLICED — only in-window changes ship each superstep, cutting
+    `_gather_elems` further. Out-of-window changes ship when their bucket
+    is reached (values only decrease, so they keep registering as changed).
   * `batch_sources` batches `forall(src in sourceSet)` into S-lane chunks
     (pod-parallel-style lanes): per-source [B] blocks become [S, B], the
     gathered views [S, N_pad], and each superstep's exchange/combine moves
@@ -47,7 +54,7 @@ import contextlib
 from .. import ir as I
 from ..ir import read_props
 from .base import (BFSCtx, CodegenError, EdgeCtx, ExprEmitter, HostCtx,
-                   VertexCtx, prop_plus_weight, pure_vertex_predicate)
+                   VertexCtx, pure_vertex_predicate, relax_candidate)
 from .local_jax import LocalCodegen
 
 _PARTITIONED_KEYS = ["esrc", "edst", "ew", "evalid", "esrc_local",
@@ -107,6 +114,10 @@ class DistCodegen(LocalCodegen):
     # pod-parallel lanes, fused into one program); bodies outside the
     # batched subset fall back to the sequential loop like the local backend
     supports_source_batching = True
+    # delta-stepping here reshapes the EXCHANGE, not the relax: the bucketed
+    # frontier flows through the partitioned push/pull supersteps unchanged,
+    # so no `_dell` padded view is taken
+    supports_delta_ell = False
 
     def __init__(self, irfn: I.IRFunction, schedule=None):
         super().__init__(irfn, schedule=schedule)
@@ -115,6 +126,9 @@ class DistCodegen(LocalCodegen):
         # stack of property groups whose `{p}_full` views are carried
         # through the enclosing BSP loop (compact/auto exchange policies)
         self._full_stack = []
+        # (value_prop, window_mask_var) of the active delta-stepping
+        # fixedPoint: emit_gathers priority-slices that prop's exchange
+        self._delta_within = None
 
     # ------------------------------------------------------------------ entry
     def generate(self) -> str:
@@ -231,10 +245,20 @@ class DistCodegen(LocalCodegen):
             if p in carried:
                 batched = self.batch is not None and p in self.batch.arrays
                 xfn = "rtd.exchange_rows" if batched else "rtd.exchange"
+                win = ""
+                if not batched and self._delta_within is not None \
+                        and p == self._delta_within[0]:
+                    # priority slice: only changed entries inside the current
+                    # bucket window ship this superstep; out-of-window changes
+                    # stay local until their bucket is reached (they keep
+                    # differing from the full view — values only decrease —
+                    # so `chg` re-selects them then). The bucketed frontier is
+                    # exchanged unsliced, so every in-window read is fresh.
+                    win = f", within={self._delta_within[1]}"
                 ge = self.em.uid("ge")
                 self.em.w(f"{p}_full, {ge} = {xfn}({p}_full, {p}, own_ids, "
                           f"{sched.dist_gather_frac!r}, "
-                          f"skip_empty={sched.dist_frontier == 'auto'})")
+                          f"skip_empty={sched.dist_frontier == 'auto'}{win})")
                 self.em.w(f"_gather_elems = _gather_elems + {ge}")
             else:
                 self._emit_full_gather(p)
@@ -251,6 +275,28 @@ class DistCodegen(LocalCodegen):
 
     def emit_finished(self, var: str, conv: str):
         self.em.w(f"{var} = ~rtd.any_global({conv})")
+
+    # ---- delta-stepping hooks -------------------------------------------
+    # the bucket advance runs on [B] blocks, so its any/min reductions must
+    # be global collectives — every shard then agrees on the same bucket
+    def _delta_any(self, expr: str) -> str:
+        return f"rtd.any_global({expr})"
+
+    def _delta_min(self, expr: str) -> str:
+        return f"rtd.min_global({expr})"
+
+    def _emit_delta_preamble(self, n: str, vprop: str, conv: str):
+        """Bucketed-frontier preamble over the [B] blocks (emitted before
+        this superstep's `emit_gathers`, so the window mask is available to
+        priority-slice the value prop's exchange). The rebinding of `conv`
+        to the windowed frontier happens on the block, BEFORE its exchange
+        — the frontier's full view is therefore exact, and every read of
+        the (possibly stale out-of-window) value full view is masked by
+        it."""
+        super()._emit_delta_preamble(n, vprop, conv)
+        d = self.schedule.delta_bucket
+        self.em.w(f"{n}_win = {vprop} < ({n}_bk + 1) * {d}")
+        self._delta_within = (vprop, f"{n}_win")
 
     # ------------------------------------------------------------------ attach
     def s_IAttach(self, s: I.IAttach, ctx):
@@ -383,10 +429,12 @@ class DistCodegen(LocalCodegen):
 
     # ------------------------------------------------------------------ writes
     def _dist_hybrid(self, s: I.IMinMaxUpdate, ectx):
-        """Detect the frontier-relax pattern `Min(t.p, other.p + e.weight)`
+        """Detect the frontier-relax pattern `Min(t.p, other.p [+ e.weight])`
         with nothing but a hoisted vertex frontier masking the contributing
         side — the pattern whose direction the Schedule may pin or switch.
-        Returns the full frontier-mask name, or None."""
+        Returns (full frontier-mask name, weighted) or None; `weighted` is
+        False for the bare-prop candidate (CC's unweighted component min),
+        which takes the same push/pull supersteps minus the weight term."""
         if self.batch is not None or s.kind != "Min" \
                 or not getattr(ectx, "pure_frontier", False):
             return None
@@ -404,11 +452,13 @@ class DistCodegen(LocalCodegen):
                 return None
         else:
             return None
-        if fr is None or prop_plus_weight(s.cand, other) != s.prop:
+        cand = relax_candidate(s.cand, other)
+        if fr is None or cand is None or cand[0] != s.prop:
             return None
-        return fr
+        return fr, cand[1]
 
-    def _emit_relax_hybrid_dist(self, s: I.IMinMaxUpdate, fr: str) -> str:
+    def _emit_relax_hybrid_dist(self, s: I.IMinMaxUpdate, fr: str,
+                                weighted: bool = True) -> str:
         """Direction-optimized distributed relax superstep.
 
           push — local scatter-min over out-edges of frontier sources + one
@@ -425,16 +475,17 @@ class DistCodegen(LocalCodegen):
         jdt = self.jdt(self.f.node_props.get(s.prop, "int32"))
         full = f"{s.prop}_full"
         new = em.uid("new")
+        wexp = (lambda w: f" + {w}" if weighted else "")
         push, pull = em.uid("push"), em.uid("pull")
         if sched.direction != "pull":
             em.w(f"{push} = lambda _fr: jnp.minimum({s.prop}, "
                  f"rtd.combine_scatter_min(N_PAD, edst, "
-                 f"jnp.where(evalid & _fr[esrc], {full}[esrc] + ew, "
+                 f"jnp.where(evalid & _fr[esrc], {full}[esrc]{wexp('ew')}, "
                  f"rt.inf_for({jdt})), {jdt})[own_ids])")
         if sched.direction != "push":
             em.w(f"{pull} = lambda _fr: jnp.minimum({s.prop}, "
                  f"rt.segment_min(jnp.where(ivalid & _fr[isrc], "
-                 f"{full}[isrc] + iw, rt.inf_for({jdt})), "
+                 f"{full}[isrc]{wexp('iw')}, rt.inf_for({jdt})), "
                  f"idst_local, B, sorted_ids=False))")
         if sched.direction == "push":
             em.w(f"{new} = {push}({fr})")
@@ -456,9 +507,10 @@ class DistCodegen(LocalCodegen):
         p = self.wtarget(s.prop)
         dtype = self.f.node_props.get(s.prop, "int32")
         jdt = self.jdt(dtype)
-        fr = self._dist_hybrid(s, ectx)
-        if fr is not None:
-            new = self._emit_relax_hybrid_dist(s, fr)
+        hyb = self._dist_hybrid(s, ectx)
+        if hyb is not None:
+            fr, weighted = hyb
+            new = self._emit_relax_hybrid_dist(s, fr, weighted)
             upd = em.uid("upd")
             em.w(f"{upd} = {new} < {s.prop}")
             em.w(f"{p} = {new}" if p == s.prop
@@ -576,8 +628,12 @@ class DistCodegen(LocalCodegen):
 
     # ------------------------------------------------------------------ BSP loops
     def s_IFixedPoint(self, s: I.IFixedPoint, ctx):
-        with self._bsp_loop_fulls(s.body):
-            super().s_IFixedPoint(s, ctx)
+        prev_within = self._delta_within
+        try:
+            with self._bsp_loop_fulls(s.body):
+                super().s_IFixedPoint(s, ctx)
+        finally:
+            self._delta_within = prev_within
 
     def s_IDoWhile(self, s: I.IDoWhile, ctx):
         with self._bsp_loop_fulls(s.body):

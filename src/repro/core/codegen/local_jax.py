@@ -17,7 +17,7 @@ from ...schedule import Schedule
 from ..ir import written_vars
 from .base import (BatchInfo, BFSCtx, CodegenError, EdgeCtx, Emitter,
                    ExprEmitter, HostCtx, VertexCtx, ctx_chain,
-                   prop_plus_weight, pure_vertex_predicate)
+                   pure_vertex_predicate, relax_candidate)
 
 _JNP_DTYPE = {"int32": "jnp.int32", "bool": "jnp.bool_",
               "float32": "jnp.float32", "float64": "jnp.float32"}
@@ -31,6 +31,10 @@ class LocalCodegen:
     VLEN = "N"
     # batched `forall(src in sourceSet)` lowering (Schedule.batch_sources)
     supports_source_batching = True
+    # takes a `_dell` padded forward-ELL param for the delta-stepping compact
+    # relax (rt.relax_minplus_delta); pallas relaxes through its own sliced
+    # kernels instead and the distributed backend relaxes partitioned arrays
+    supports_delta_ell = True
 
     def __init__(self, irfn: I.IRFunction, schedule: Optional[Schedule] = None,
                  batch_sources: Optional[int] = None):
@@ -41,6 +45,8 @@ class LocalCodegen:
         self.dtypes = {}
         self.write_alias = {}              # fixedPoint redirects
         self.batch = None                  # active BatchInfo (batched set loop)
+        self._delta_prop = None            # Min-relax prop of the active
+        #                                    delta-stepping fixedPoint
         # every engine knob is baked into the emitted source as a literal:
         # same Schedule -> byte-identical source, and nothing generated ever
         # reads the deprecated ENGINE singleton at run time
@@ -110,13 +116,60 @@ class LocalCodegen:
         wr = written_vars(body)
         return [v for v in self.declared if v in wr]
 
+    # ---- delta-stepping detection (Schedule.priority == "delta") ------------
+    def _delta_target(self, body) -> Optional[str]:
+        """The value prop a delta-stepping lowering of this fixedPoint body
+        would bucket on: the unique int32 Min-relax target (SSSP's dist,
+        CC's comp). None when the knob is off or the body has no (or an
+        ambiguous) monotonic Min relax — PR/TC loops pass through unchanged."""
+        if self.schedule.priority != "delta" or self.batch is not None:
+            return None
+        props = []
+
+        def scan(stmts):
+            for st in stmts:
+                if isinstance(st, I.IMinMaxUpdate) and st.kind == "Min" and \
+                        self.f.node_props.get(st.prop) == "int32":
+                    if st.prop not in props:
+                        props.append(st.prop)
+                for attr in ("body", "then", "els", "rev_body"):
+                    sub = getattr(st, attr, None)
+                    if sub:
+                        scan(sub)
+
+        scan(body)
+        return props[0] if len(props) == 1 else None
+
+    def _wants_dell(self) -> bool:
+        """True when the generated function should take the `_dell` padded
+        forward-ELL param: some fixedPoint in the program lowers to
+        delta-stepping and this backend relaxes through it."""
+        if not self.supports_delta_ell:
+            return False
+        fps = []
+
+        def scan(stmts):
+            for st in stmts:
+                if isinstance(st, I.IFixedPoint):
+                    fps.append(st)
+                for attr in ("body", "then", "els", "rev_body"):
+                    sub = getattr(st, attr, None)
+                    if sub:
+                        scan(sub)
+
+        scan(self.f.body)
+        return any(self._delta_target(fp.body) is not None for fp in fps)
+
     # ------------------------------------------------------------------ entry
     def generate(self) -> str:
         f, em = self.f, self.em
         g = f.graph_param
         args = [p.name for p in f.params]
-        # non-graph prop params may be passed as None (re-initialized inside)
-        sig = ", ".join([args[0]] + [f"{a}=None" for a in args[1:]])
+        # non-graph prop params may be passed as None (re-initialized inside);
+        # delta-stepping programs additionally take the padded ELL view the
+        # compact relax gathers frontier out-rows from (None = dense fallback)
+        head = [args[0]] + (["_dell=None"] if self._wants_dell() else [])
+        sig = ", ".join(head + [f"{a}=None" for a in args[1:]])
         em.w(f"def {f.name}({sig}):")
         with em.block():
             em.w(f"N = {g}.num_nodes")
@@ -456,30 +509,35 @@ class LocalCodegen:
         em.w(f"{p} = {p} + jnp.sum(jnp.where({m}, {e}, 0), axis=0)")
 
     def _hybrid_frontier(self, s: I.IMinMaxUpdate, ectx):
-        """Detect the frontier-relax pattern `Min(t.p, other.p + e.weight)`
+        """Detect the frontier-relax pattern `Min(t.p, other.p [+ e.weight])`
         where the contributing side is masked by nothing but a per-vertex
-        frontier. Returns (applicable, frontier_var_or_None)."""
+        frontier. Returns (applicable, frontier_var_or_None, weighted) —
+        `weighted` is False for the bare-prop candidate (CC's unweighted
+        component min), which takes the same push/pull machinery minus the
+        `+ w` term."""
         if s.kind != "Min" or not ectx.pure_frontier:
-            return False, None
+            return False, None, True
         if self.f.node_props.get(s.prop) != "int32":
-            return False, None
+            return False, None, True
         if s.target == ectx.it and ectx.direction == "out":
             # push form: the outer vertex contributes along its out-edges
             other, frontier = ectx.source, ectx.src_vmask
             if ectx.it_vmask is not None:
-                return False, None      # extra mask on the landing side
+                return False, None, True    # extra mask on the landing side
         elif s.target == ectx.source and ectx.direction == "in":
             # pull form: in-neighbors contribute into the outer vertex
             other, frontier = ectx.it, ectx.it_vmask
             if ectx.src_vmask is not None:
-                return False, None
+                return False, None, True
         else:
-            return False, None
-        if prop_plus_weight(s.cand, other) != s.prop:
-            return False, None
-        return True, frontier
+            return False, None, True
+        cand = relax_candidate(s.cand, other)
+        if cand is None or cand[0] != s.prop:
+            return False, None, True
+        return True, frontier, cand[1]
 
-    def emit_relax_hybrid(self, s: I.IMinMaxUpdate, frontier):
+    def emit_relax_hybrid(self, s: I.IMinMaxUpdate, frontier,
+                          weighted: bool = True):
         """Direction-optimized relax step: push (scatter-min from frontier
         sources) vs pull (segment-min over in-edges), switched on-device by
         frontier occupancy — or pinned by `Schedule.direction`; both
@@ -488,21 +546,35 @@ class LocalCodegen:
         compiled schedule. Emitted inline (not as a call to
         rt.relax_minplus_hybrid, which is the same computation — keep in
         sync) so the generated source shows the full lowering, per the
-        paper's source-to-source design."""
+        paper's source-to-source design.
+
+        Inside a delta-stepping fixedPoint (`frontier` is the bucketed
+        window) the relax goes through `rt.relax_minplus_delta` instead:
+        same relaxation, but a frontier that fits the compact cap relaxes
+        only its gathered ELL out-rows — O(cap * max_deg), not O(E)."""
         em = self.em
         g = self.f.graph_param
         sched = self.schedule
         new = em.uid("new")
         if frontier is None:
-            em.w(f"{new} = rt.relax_minplus_hybrid({g}, {s.prop}, None)")
+            em.w(f"{new} = rt.relax_minplus_hybrid({g}, {s.prop}, None"
+                 f"{'' if weighted else ', weighted=False'})")
             return new
+        if self._delta_prop == s.prop and self.supports_delta_ell:
+            em.w(f"{new} = rt.relax_minplus_delta({g}, {s.prop}, {frontier}, "
+                 f"_dell, max(min(N // 8, 4096), 32){self._engine_kwargs()}"
+                 f"{'' if weighted else ', weighted=False'})")
+            return new
+        wexp = lambda w: f" + {w}" if weighted else ""  # noqa: E731
         push, pull = em.uid("push"), em.uid("pull")
         if sched.direction != "pull":
             em.w(f"{push} = lambda _d: rt.scatter_min(_d, {g}.indices, "
-                 f"jnp.where({frontier}[{g}.edge_src], _d[{g}.edge_src] + {g}.weights, rt.INF))")
+                 f"jnp.where({frontier}[{g}.edge_src], "
+                 f"_d[{g}.edge_src]{wexp(f'{g}.weights')}, rt.INF))")
         if sched.direction != "push":
             em.w(f"{pull} = lambda _d: jnp.minimum(_d, rt.segment_min("
-                 f"jnp.where({frontier}[{g}.rev_indices], _d[{g}.rev_indices] + {g}.rev_weights, rt.INF), "
+                 f"jnp.where({frontier}[{g}.rev_indices], "
+                 f"_d[{g}.rev_indices]{wexp(f'{g}.rev_weights')}, rt.INF), "
                  f"{g}.rev_edge_dst, {self.VLEN}))")
         if sched.direction == "push":
             em.w(f"{new} = {push}({s.prop})")
@@ -524,9 +596,9 @@ class LocalCodegen:
             raise CodegenError("Min/Max update outside a neighbor loop")
         p = self.wtarget(s.prop)
         dtype = self.f.node_props.get(s.prop, "int32")
-        ok, frontier = self._hybrid_frontier(s, ectx)
+        ok, frontier, weighted = self._hybrid_frontier(s, ectx)
         if ok:
-            new = self.emit_relax_hybrid(s, frontier)
+            new = self.emit_relax_hybrid(s, frontier, weighted)
             upd = em.uid("upd")
             em.w(f"{upd} = {new} < {s.prop}")
             em.w(f"{p} = {new}" if p == s.prop else
@@ -594,13 +666,20 @@ class LocalCodegen:
         if self.batch is not None:
             raise CodegenError("fixedPoint inside a batched source loop")
         conv = s.conv_prop
+        delta = self._delta_target(s.body)
+        if delta is not None and (delta == conv or
+                                  self.f.node_props.get(conv) != "bool"):
+            delta = None    # bucketing needs a bool pending-mask conv prop
         self.declare(s.var, "bool")
         em.w(f"{s.var} = jnp.asarray(False)")
         carry = self.carries(s.body)
         if s.var not in carry:
             carry.append(s.var)
-        pack = ", ".join(carry)
         n = em.uid("fp")
+        if delta is not None:
+            em.w(f"{n}_bk = jnp.int32(0)")
+            carry.append(f"{n}_bk")
+        pack = ", ".join(carry)
         em.w(f"def {n}_cond(_state):")
         with em.block():
             em.w(f"({pack},) = _state" if len(carry) == 1 else f"({pack}) = _state")
@@ -608,11 +687,23 @@ class LocalCodegen:
         em.w(f"def {n}_body(_state):")
         with em.block():
             em.w(f"({pack},) = _state" if len(carry) == 1 else f"({pack}) = _state")
-            em.w(f"{conv}_nxt = jnp.zeros_like({conv})")
+            if delta is None:
+                em.w(f"{conv}_nxt = jnp.zeros_like({conv})")
+            else:
+                # delta-stepping: the sweep's frontier is the pending set
+                # restricted to the current bucket window; out-of-window
+                # pending vertices seed the next sweep's pending set
+                self._emit_delta_preamble(n, delta, conv)
+                em.w(f"{conv}_nxt = {n}_keep")
             saved = dict(self.write_alias)
             self.write_alias[conv] = f"{conv}_nxt"
-            self.body(s.body, ctx)
-            self.write_alias = saved
+            prev_dprop = self._delta_prop
+            self._delta_prop = delta
+            try:
+                self.body(s.body, ctx)
+            finally:
+                self._delta_prop = prev_dprop
+                self.write_alias = saved
             em.w(f"{conv} = {conv}_nxt")
             self.emit_finished(s.var, conv)
             em.w(f"return ({pack},)" if len(carry) == 1 else f"return ({pack})")
@@ -620,6 +711,32 @@ class LocalCodegen:
              if len(carry) == 1 else
              f"_state = jax.lax.while_loop({n}_cond, {n}_body, ({pack}))")
         em.w(f"({pack},) = _state" if len(carry) == 1 else f"({pack}) = _state")
+
+    def _emit_delta_preamble(self, n: str, vprop: str, conv: str):
+        """Bucketed-frontier preamble of a delta-stepping fixedPoint body.
+
+        The window is upper-bound-only — `value < (bk + 1) * Δ` — so values
+        that move backwards into earlier buckets (CC's component min) stay
+        in the window; the fused advance jumps `bk` straight to the bucket
+        of the smallest pending value, so no sweep relaxes an empty
+        frontier. Rebinding `conv` to the windowed frontier makes every
+        downstream filter/relax emission see the bucketed frontier without
+        touching the rest of the lowering."""
+        em = self.em
+        d = self.schedule.delta_bucket
+        em.w(f"{n}_bk = jnp.where("
+             f"{self._delta_any(f'{conv} & ({vprop} < ({n}_bk + 1) * {d})')}, "
+             f"{n}_bk, "
+             f"{self._delta_min(f'jnp.where({conv}, {vprop}, rt.INF)')} // {d})")
+        em.w(f"{n}_fr = {conv} & ({vprop} < ({n}_bk + 1) * {d})")
+        em.w(f"{n}_keep = {conv} & ~{n}_fr")
+        em.w(f"{conv} = {n}_fr")
+
+    def _delta_any(self, expr: str) -> str:
+        return f"jnp.any({expr})"
+
+    def _delta_min(self, expr: str) -> str:
+        return f"jnp.min({expr})"
 
     def emit_finished(self, var: str, conv: str):
         self.em.w(f"{var} = ~jnp.any({conv})")

@@ -55,6 +55,10 @@ def _only_reads_side(expr, side: str) -> bool:
 
 class PallasCodegen(LocalCodegen):
     backend_name = "pallas"
+    # the kernel op already takes an arbitrary frontier mask, so a delta-
+    # stepping fixedPoint relaxes its bucketed window through the same
+    # sliced-ELL kernels — no separate `_dell` padded view needed
+    supports_delta_ell = False
 
     def _block_rows_literal(self) -> str:
         """`Schedule.block_rows` as a source literal for the kernel ops.
@@ -96,12 +100,19 @@ class PallasCodegen(LocalCodegen):
         return em.source()
 
     # ---- hot pattern 1: frontier relax → sliced-ELL hybrid kernel ------------
-    def emit_relax_hybrid(self, s: I.IMinMaxUpdate, frontier):
+    def emit_relax_hybrid(self, s: I.IMinMaxUpdate, frontier,
+                          weighted: bool = True):
         """Same pattern the local backend detects, lowered to the kernel op:
         per-bucket pull kernels over the reverse sliced-ELL view, or
         scatter-push over the CSR edge arrays when the frontier is sparse
         (the op owns the on-device occupancy switch). The compiled
-        schedule's threshold/direction are baked in as literals."""
+        schedule's threshold/direction are baked in as literals. Under
+        delta-stepping the frontier arriving here is already the bucketed
+        window, so the same kernel call applies unchanged. The unweighted
+        relax (CC) keeps the inherited inline jnp lowering — the min-plus
+        kernels are weighted."""
+        if not weighted:
+            return super().emit_relax_hybrid(s, frontier, weighted)
         em = self.em
         g = self.f.graph_param
         new = em.uid("new")

@@ -91,6 +91,23 @@ class GraphContext:
         return self.view(("ell", bool(reverse)),
                          lambda g: to_ell(g, reverse=reverse))
 
+    # a padded forward ELL costs N * round8(max_deg) cells; past this many
+    # multiples of E (hub-heavy degree distributions) the compact bucket
+    # relax would gather mostly padding, so delta-stepping falls back dense
+    DELTA_ELL_MAX_BLOWUP = 8
+
+    def delta_ell(self):
+        """Forward padded ELL view for the delta-stepping compact relax
+        (`rt.relax_minplus_delta` gathers frontier out-rows from it), or
+        None when the padding blowup makes it uneconomical — the relax then
+        takes its dense fallback, which computes the same fixed point."""
+        def build(g):
+            cells = g.num_nodes * max(-(-max(int(g.max_out_degree), 1) // 8) * 8, 8)
+            if cells > self.DELTA_ELL_MAX_BLOWUP * max(g.num_edges, 1):
+                return None
+            return to_ell(g, reverse=False)
+        return self.view(("delta_ell",), build)
+
     def padded(self, multiple: int) -> CSRGraph:
         """Node-count-padded copy of the graph (device-shard alignment)."""
         return self.view(("padded", int(multiple)),
@@ -148,6 +165,8 @@ def _graph_stats(g: CSRGraph) -> dict:
     out_deg = np.asarray(g.out_degree)
     avg = e / n if n else 0.0
     std = float(out_deg.std()) if n else 0.0
+    weights = np.asarray(g.weights)
+    avg_w = float(weights.mean()) if e else 0.0
     stats = {
         "num_nodes": n,
         "num_edges": e,
@@ -158,6 +177,10 @@ def _graph_stats(g: CSRGraph) -> dict:
         "skew": round(g.max_out_degree / avg, 3) if avg else 1.0,
         # coefficient of variation: 0 for regular graphs, >1 for power laws
         "deg_cv": round(std / avg, 3) if avg else 0.0,
+        # weight scale: candidate delta_bucket widths are multiples of the
+        # mean edge weight (a bucket spans ~avg_weight * k relaxed hops)
+        "avg_weight": round(avg_w, 3),
+        "max_weight": int(weights.max()) if e else 0,
     }
     if e == 0:
         stats.update(probe_depth=0, probe_max_frontier_frac=0.0,

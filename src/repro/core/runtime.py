@@ -183,7 +183,8 @@ def frontier_should_push(frontier: jax.Array, n: int,
 def relax_minplus_hybrid(g: CSRGraph, dist: jax.Array,
                          frontier: jax.Array | None = None,
                          threshold_frac: float | None = None,
-                         direction: str = "auto") -> jax.Array:
+                         direction: str = "auto",
+                         weighted: bool = True) -> jax.Array:
     """One SSSP/min-plus relaxation restricted to `frontier` sources, with
     push/pull direction chosen on-device.
 
@@ -192,7 +193,9 @@ def relax_minplus_hybrid(g: CSRGraph, dist: jax.Array,
 
     Both compute dist'[v] = min(dist[v], min_{(u,v)∈E, frontier[u]} dist[u]+w)
     exactly, so the switch never changes results. `frontier=None` is a dense
-    sweep (every vertex contributes).
+    sweep (every vertex contributes). `weighted=False` drops the `+ w` term
+    (the candidate is just dist[u]) — the unweighted Min relax of connected
+    components, which takes the same push/pull machinery.
 
     NOTE: this push/pull relaxation pair exists in four places — here, the
     batched form below (`relax_minplus_hybrid_batch`), the kernel-backed
@@ -203,13 +206,14 @@ def relax_minplus_hybrid(g: CSRGraph, dist: jax.Array,
     n = g.num_nodes
 
     def push(d):
-        cand = d[g.edge_src] + g.weights
+        cand = d[g.edge_src] + g.weights if weighted else d[g.edge_src]
         if frontier is not None:
             cand = jnp.where(frontier[g.edge_src], cand, INF)
         return scatter_min(d, g.indices, cand)
 
     def pull(d):
-        cand = d[g.rev_indices] + g.rev_weights
+        cand = d[g.rev_indices] + g.rev_weights if weighted \
+            else d[g.rev_indices]
         if frontier is not None:
             cand = jnp.where(frontier[g.rev_indices], cand, INF)
         return jnp.minimum(d, segment_min(cand, g.rev_edge_dst, n))
@@ -222,6 +226,63 @@ def relax_minplus_hybrid(g: CSRGraph, dist: jax.Array,
         return pull(dist)
     return jax.lax.cond(frontier_should_push(frontier, n, threshold_frac),
                         push, pull, dist)
+
+
+# --- delta-stepping (priority-bucketed) relaxation -----------------------------
+#
+# Schedule.priority == "delta" restricts each fixedPoint sweep to the
+# vertices whose tentative value falls below the current bucket boundary
+# (k + 1) * delta_bucket — Meyer/Sanders delta-stepping expressed over the
+# same frontier machinery. Min relaxation is monotone, so any frontier
+# restriction that eventually processes every modified vertex reaches the
+# identical fixed point; the payoff is per-sweep WORK: a settled bucket's
+# frontier is tiny, and the compact path below relaxes only its out-rows
+# (O(cap * max_deg) via a padded ELL gather) instead of sweeping all E edges.
+
+def relax_minplus_delta(g: CSRGraph, dist: jax.Array, frontier: jax.Array,
+                        ell=None, cap: int | None = None,
+                        threshold_frac: float | None = None,
+                        direction: str = "auto",
+                        weighted: bool = True) -> jax.Array:
+    """One bucketed min relaxation over `frontier` sources (the caller has
+    already restricted the frontier to the current delta bucket).
+
+    When a padded forward ELL view and a static `cap` are supplied and the
+    frontier fits, the compact path runs: frontier ids are compacted into a
+    [cap] buffer by an O(N) cumsum (no sort), their padded out-rows
+    gathered, and the candidates scatter-min'd. Pad cells (col == n) and
+    unused slots are masked to INF and scattered out of bounds, which XLA
+    drops. Overflowing frontiers — and `ell=None` (hub-heavy graphs where
+    max_deg makes the ELL view uneconomical) — fall back to the dense
+    hybrid sweep, which computes the same relaxation."""
+    if ell is None or cap is None or cap <= 0:
+        return relax_minplus_hybrid(g, dist, frontier, threshold_frac,
+                                    direction, weighted)
+    n = g.num_nodes
+    cap = int(min(cap, n))
+
+    def compact(d):
+        pos = jnp.cumsum(frontier.astype(jnp.int32)) - 1
+        slot = jnp.where(frontier & (pos < cap), pos, cap)   # cap = trash slot
+        ids = jnp.full((cap + 1,), n, jnp.int32).at[slot].set(
+            jnp.arange(n, dtype=jnp.int32))[:cap]
+        row_ok = ids < n
+        idc = jnp.where(row_ok, ids, 0)
+        cols = ell.cols[idc]                                  # [cap, D]
+        valid = row_ok[:, None] & (cols < n)
+        src = d[idc][:, None]
+        cand = src + ell.wts[idc] if weighted \
+            else jnp.broadcast_to(src, cols.shape)
+        cand = jnp.where(valid, cand, INF)
+        tgt = jnp.where(valid, cols, n)                       # n → dropped
+        return d.at[tgt.ravel()].min(cand.ravel())
+
+    def dense(d):
+        return relax_minplus_hybrid(g, d, frontier, threshold_frac,
+                                    direction, weighted)
+
+    return jax.lax.cond(frontier_size(frontier) <= jnp.int32(cap),
+                        compact, dense, dist)
 
 
 # --- BFS (iterateInBFS construct) ----------------------------------------------
@@ -306,7 +367,8 @@ def _cond_by_rows(rows_push, push_all, pull_all, mixed, arg):
 def relax_minplus_hybrid_batch(g: CSRGraph, dist: jax.Array,
                                frontier: jax.Array | None = None,
                                threshold_frac: float | None = None,
-                               direction: str = "auto") -> jax.Array:
+                               direction: str = "auto",
+                               weighted: bool = True) -> jax.Array:
     """Batched SSSP/min-plus relaxation: dist [B, N], frontier [B, N] bool.
 
     Row-for-row identical to `relax_minplus_hybrid` on each dist row with its
@@ -316,13 +378,15 @@ def relax_minplus_hybrid_batch(g: CSRGraph, dist: jax.Array,
     n = g.num_nodes
 
     def push(d, fr):
-        cand = d[:, g.edge_src] + g.weights[None, :]
+        cand = d[:, g.edge_src] + g.weights[None, :] if weighted \
+            else d[:, g.edge_src]
         if fr is not None:
             cand = jnp.where(fr[:, g.edge_src], cand, INF)
         return scatter_min_rows(d, g.indices, cand)
 
     def pull(d, fr):
-        cand = d[:, g.rev_indices] + g.rev_weights[None, :]
+        cand = d[:, g.rev_indices] + g.rev_weights[None, :] if weighted \
+            else d[:, g.rev_indices]
         if fr is not None:
             cand = jnp.where(fr[:, g.rev_indices], cand, INF)
         return jnp.minimum(d, segment_min_batch(cand, g.rev_edge_dst, n))
@@ -341,6 +405,20 @@ def relax_minplus_hybrid_batch(g: CSRGraph, dist: jax.Array,
         lambda d: pull(push(d, frontier & rows_push[:, None]),
                        frontier & ~rows_push[:, None]),
         dist)
+
+
+def relax_minplus_delta_batch(g: CSRGraph, dist: jax.Array,
+                              frontier: jax.Array,
+                              threshold_frac: float | None = None,
+                              direction: str = "auto",
+                              weighted: bool = True) -> jax.Array:
+    """Batched bucketed min relaxation: dist [B, N], frontier [B, N] already
+    restricted per row to that row's current delta bucket. Each source lane
+    settles its own bucket sequence, so there is no whole-batch compact
+    buffer — the restriction itself (far fewer active sources per sweep) is
+    the win, and the relaxation routes through the batched hybrid."""
+    return relax_minplus_hybrid_batch(g, dist, frontier, threshold_frac,
+                                      direction, weighted)
 
 
 def bfs_levels_batch(g: CSRGraph, roots: jax.Array,
@@ -392,9 +470,17 @@ def bfs_levels_batch(g: CSRGraph, roots: jax.Array,
 
 def sssp_multi(g: CSRGraph, sources: jax.Array,
                threshold_frac: float | None = None,
-               direction: str = "auto") -> jax.Array:
+               direction: str = "auto",
+               priority: str = "none",
+               delta_bucket: int = 64) -> jax.Array:
     """Multi-query SSSP: one batched fixed point answering B source queries
-    per sweep. Returns dist int32[B, N]; row b == SSSP from sources[b]."""
+    per sweep. Returns dist int32[B, N]; row b == SSSP from sources[b].
+
+    `priority="delta"` runs each lane's fixed point as delta-stepping: a
+    sweep relaxes only the lane's vertices below its current bucket
+    boundary, and a lane whose bucket settled jumps straight to the bucket
+    of its smallest pending value. The fixed point is unchanged (Min is
+    monotone); only the per-sweep work shrinks."""
     n = g.num_nodes
     b = sources.shape[0]
     lanes = jnp.arange(b, dtype=jnp.int32)
@@ -404,12 +490,31 @@ def sssp_multi(g: CSRGraph, sources: jax.Array,
     def cond(state):
         return jnp.any(state[1])
 
-    def body(state):
-        d, fr = state
-        d2 = relax_minplus_hybrid_batch(g, d, fr, threshold_frac, direction)
-        return d2, d2 < d
+    if priority != "delta":
+        def body(state):
+            d, fr = state
+            d2 = relax_minplus_hybrid_batch(g, d, fr, threshold_frac,
+                                            direction)
+            return d2, d2 < d
 
-    dist, _ = jax.lax.while_loop(cond, body, (dist0, fr0))
+        dist, _ = jax.lax.while_loop(cond, body, (dist0, fr0))
+        return dist
+
+    delta = jnp.int32(delta_bucket)
+
+    def body(state):
+        d, mod, bk = state
+        # fused bucket advance: a lane whose window emptied jumps to the
+        # bucket of its smallest pending value (upper-bound-only window)
+        pend_min = jnp.min(jnp.where(mod, d, INF), axis=1)
+        bk = jnp.where(jnp.any(mod & (d < (bk + 1)[:, None] * delta), axis=1),
+                       bk, pend_min // delta)
+        fr = mod & (d < (bk + 1)[:, None] * delta)
+        d2 = relax_minplus_delta_batch(g, d, fr, threshold_frac, direction)
+        return d2, (d2 < d) | (mod & ~fr), bk
+
+    dist, _, _ = jax.lax.while_loop(
+        cond, body, (dist0, fr0, jnp.zeros((b,), jnp.int32)))
     return dist
 
 

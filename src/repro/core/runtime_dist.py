@@ -147,7 +147,7 @@ def compact_cap(block: int, frac: float) -> int:
 
 
 def exchange(full_prev, blk, own_ids, gather_frac: float = 0.25, *,
-             skip_empty: bool = True, _dense=None):
+             skip_empty: bool = True, within=None, _dense=None):
     """Frontier-compressed BSP property exchange.
 
     `full_prev` is the [N_pad] view every shard agreed on last superstep;
@@ -160,10 +160,20 @@ def exchange(full_prev, blk, own_ids, gather_frac: float = 0.25, *,
                   (only when `skip_empty`, the "auto" policy);
       * compact — every shard's change count fits the fixed-size buffer
                   (`cap = compact_cap(B, gather_frac)`): all-gather only
-                  (id, value) pairs and scatter them into `full_prev`,
-                  moving 2*cap*P elements instead of N_pad — the paper's
-                  §4.2 send-buffer aggregation, volume edition;
+                  (id, value) pairs — stacked into ONE [cap, 2] int32
+                  buffer so the whole exchange is a single collective —
+                  and scatter them into `full_prev`, moving 2*cap*P
+                  elements instead of N_pad — the paper's §4.2 send-buffer
+                  aggregation, volume edition;
       * dense   — overflow fallback: the classic full all-gather.
+
+    `within` (optional bool [B]) restricts the exchange to a slice of the
+    changed entries — the delta-stepping priority slice: only changes whose
+    value sits in the current bucket window ship now. Out-of-window changes
+    stay local; the caller must guarantee (and delta-stepping does, because
+    values only decrease) that they still differ from `full_prev` when
+    their bucket arrives, so they ship then. Stale out-of-window entries in
+    the returned view are the caller's contract to mask.
 
     Returns `(full, gathered_elems)` where `gathered_elems` is the number
     of elements this superstep actually moved (int32, on device). Padded
@@ -174,6 +184,8 @@ def exchange(full_prev, blk, own_ids, gather_frac: float = 0.25, *,
     cap = compact_cap(blk.shape[0], gather_frac)
     p = axis_size(AXIS)
     chg = blk != full_prev[own_ids]
+    if within is not None:
+        chg = chg & within
     cnt = jnp.sum(chg.astype(jnp.int32))
 
     def skip(_):
@@ -182,7 +194,10 @@ def exchange(full_prev, blk, own_ids, gather_frac: float = 0.25, *,
     def dense(_):
         # `_dense` overrides the fallback gather when the flat layout is a
         # view of something an all-gather cannot reproduce by concatenation
-        # (the [S, B] lane blocks of `exchange_rows`)
+        # (the [S, B] lane blocks of `exchange_rows`). Under `within` the
+        # dense gather publishes out-of-window entries EARLY — harmless:
+        # they are fresh (not stale) values, and the slicing contract only
+        # forbids serving stale in-window entries.
         return (gather(blk) if _dense is None else _dense()), jnp.int32(n_pad)
 
     def compact(_):
@@ -191,8 +206,24 @@ def exchange(full_prev, blk, own_ids, gather_frac: float = 0.25, *,
         lane_ok = jnp.arange(cap) < cnt
         # out-of-range ids mark the padding lanes; scatter drops them
         ids = jnp.where(lane_ok, own_ids[sel], n_pad)
-        ids_all = jax.lax.all_gather(ids, AXIS, tiled=True)
-        vals_all = jax.lax.all_gather(blk[sel], AXIS, tiled=True)
+        vals = blk[sel]
+        # one collective for the whole exchange: the (id, value) pairs ride
+        # a single [cap, 2] int32 buffer (bool widens, float32 bitcasts —
+        # both lossless round trips), halving collective launches without
+        # changing the 2*cap*P element volume
+        if vals.dtype == jnp.bool_:
+            lane = vals.astype(jnp.int32)
+        elif vals.dtype == jnp.int32:
+            lane = vals
+        else:
+            lane = jax.lax.bitcast_convert_type(vals, jnp.int32)
+        pairs = jax.lax.all_gather(
+            jnp.stack([ids, lane], axis=1), AXIS, tiled=True)
+        ids_all, vals_all = pairs[:, 0], pairs[:, 1]
+        if vals.dtype == jnp.bool_:
+            vals_all = vals_all.astype(jnp.bool_)
+        elif vals.dtype != jnp.int32:
+            vals_all = jax.lax.bitcast_convert_type(vals_all, vals.dtype)
         return full_prev.at[ids_all].set(vals_all), jnp.int32(2 * cap * p)
 
     if 2 * cap * p >= n_pad:   # compact cannot beat dense at this capacity
@@ -244,6 +275,10 @@ def por(x):  # global OR of a local bool scalar
 
 def any_global(x):  # global OR over a local bool array
     return por(jnp.any(x))
+
+
+def min_global(x):  # global min over a local array (delta bucket advance)
+    return pmin(jnp.min(x))
 
 
 def combine_scatter_min(n_pad: int, idx, cand, dtype):

@@ -38,6 +38,7 @@ LANE_MULTIPLE = 8
 
 _DIRECTIONS = ("auto", "push", "pull")
 _DIST_FRONTIERS = ("dense", "compact", "auto")
+_PRIORITIES = ("none", "delta")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -93,6 +94,23 @@ class Schedule:
         ``2 * cap * num_shards`` elements (ids + values) instead of the
         dense ``N_pad``, so fractions >= 0.5 cannot beat the dense gather
         and the exchange statically degrades to ``"dense"`` there.
+    priority:
+        Ordering policy for monotonic Min-relax fixedPoint loops (SSSP-
+        style). ``"none"`` relaxes the whole modified frontier every sweep
+        (the paper's scheme). ``"delta"`` lowers the loop to delta-stepping:
+        each sweep relaxes only the vertices whose tentative value falls
+        below the current bucket boundary ``(k + 1) * delta_bucket``,
+        iterating until the bucket settles, then advances ``k`` straight to
+        the bucket of the smallest pending value. Min relaxation is
+        monotone, so restricting the frontier never changes the fixed
+        point — only the work per sweep. Loops without a Min relax
+        (PageRank, TC) ignore the knob.
+    delta_bucket:
+        Bucket width Δ for ``priority="delta"`` (a positive integer, in
+        units of edge weight). Small Δ approaches Dijkstra ordering (less
+        wasted relaxation work per sweep, more bucket phases); large Δ
+        approaches the monotonic relax. ``autotune()`` derives candidates
+        from the graph's weight scale.
     """
 
     num_buckets: int = 4
@@ -104,10 +122,13 @@ class Schedule:
     block_rows: object = 256   # int (uniform) or tuple of per-bucket caps
     dist_frontier: str = "dense"
     dist_gather_frac: float = 0.25
+    priority: str = "none"
+    delta_bucket: int = 64
 
     def __post_init__(self):
         set_ = lambda k, v: object.__setattr__(self, k, v)  # noqa: E731 (frozen)
-        for name in ("num_buckets", "min_width", "growth", "batch_sources"):
+        for name in ("num_buckets", "min_width", "growth", "batch_sources",
+                     "delta_bucket"):
             v = getattr(self, name)
             # accept anything integer-valued (numpy ints from autotuning
             # sweeps, integral floats) but normalize to python int so
@@ -161,6 +182,16 @@ class Schedule:
             raise ValueError(
                 f"Schedule.dist_frontier must be one of {_DIST_FRONTIERS}, "
                 f"got {self.dist_frontier!r}")
+        if isinstance(self.priority, str):
+            set_("priority", str(self.priority))
+        if self.priority not in _PRIORITIES:
+            raise ValueError(
+                f"Schedule.priority must be one of {_PRIORITIES}, got "
+                f"{self.priority!r}")
+        if self.delta_bucket <= 0:
+            raise ValueError(
+                f"Schedule.delta_bucket must be a positive bucket width "
+                f"(in edge-weight units), got {self.delta_bucket}")
         gfrac = self.dist_gather_frac
         if isinstance(gfrac, numbers.Real) and not isinstance(gfrac, bool):
             set_("dist_gather_frac", float(gfrac))

@@ -115,6 +115,8 @@ def dist_schedules():
         dist_gather_frac=st.sampled_from([1 / 16, 0.25, 0.5, 1.0]),
         push_threshold_frac=st.sampled_from([0.0, 1 / 16, 1.0]),
         batch_sources=st.sampled_from([0, 2, 32]),
+        priority=st.sampled_from(["none", "delta"]),
+        delta_bucket=st.sampled_from([1, 7, 64, 500]),
     )
 
 

@@ -191,6 +191,9 @@ def test_engine_shim_validates_before_committing(engine_guard):
     (dict(dist_frontier="sparse"), "dist_frontier"),
     (dict(dist_gather_frac=1.5), "dist_gather_frac"),
     (dict(dist_gather_frac=-0.1), "dist_gather_frac"),
+    (dict(priority="fifo"), "priority"),
+    (dict(delta_bucket=0), "delta_bucket"),
+    (dict(delta_bucket=-8), "delta_bucket"),
 ])
 def test_schedule_validation_is_actionable(bad, match):
     with pytest.raises(ValueError, match=match):
