@@ -345,6 +345,27 @@ class TuningRecord:
         return cls.from_dict(json.loads(text))
 
 
+def _read_records(path: Optional[str]) -> dict:
+    """Parse a store file into a {key: TuningRecord} dict. Malformed files
+    or records read as empty/skipped (a miss, never a crash)."""
+    records: dict = {}
+    if not path or not os.path.exists(path):
+        return records
+    try:
+        with open(path) as f:
+            data = json.load(f)
+        raw = data.get("records", [])
+    except (json.JSONDecodeError, AttributeError, OSError):
+        return records
+    for d in raw:
+        try:
+            rec = TuningRecord.from_dict(d)
+            records[rec.key()] = rec
+        except (TypeError, ValueError):
+            continue   # skip the damaged record, keep the rest
+    return records
+
+
 class TuningStore:
     """JSON-file-backed map of `TuningRecord`s.
 
@@ -365,29 +386,40 @@ class TuningStore:
         """Read the store file; malformed content is a miss, not a crash —
         an unparseable file or record means "never tuned", so the caller
         re-measures and the next `save()` rewrites a clean file."""
-        self._records = {}
-        try:
-            with open(self.path) as f:
-                data = json.load(f)
-            records = data.get("records", [])
-        except (json.JSONDecodeError, AttributeError, OSError):
-            return
-        for d in records:
-            try:
-                rec = TuningRecord.from_dict(d)
-                self._records[rec.key()] = rec
-            except (TypeError, ValueError):
-                continue   # skip the damaged record, keep the rest
+        self._records = _read_records(self.path)
 
-    def save(self) -> None:
+    def save(self, *, merge: bool = True) -> None:
+        """Persist the store, safely under concurrent writers.
+
+        Two protections (two servers sharing one store file must not
+        truncate each other's records):
+
+        * **reload-merge** — the on-disk records are re-read and merged
+          under this store's records (memory wins on key conflicts; both
+          stores' disjoint records survive an interleaved save-save), so a
+          writer that loaded an older file never blindly overwrites what a
+          peer tuned since. `merge=False` restores the overwrite semantics
+          (explicitly pruning a store).
+        * **atomic write** — the merged file is written to a
+          writer-unique temp name and `os.replace`d into place, so a
+          reader (or a crashed writer) can never observe a torn file.
+        """
         if not self.path:
             return
+        if merge:
+            disk = _read_records(self.path)
+            disk.update(self._records)
+            self._records = disk
         data = {"version": RECORD_VERSION,
                 "records": [r.to_dict() for r in self._records.values()]}
-        tmp = f"{self.path}.tmp"
-        with open(tmp, "w") as f:
-            json.dump(data, f, indent=2)
-        os.replace(tmp, self.path)
+        tmp = f"{self.path}.{os.getpid()}.{id(self):x}.tmp"
+        try:
+            with open(tmp, "w") as f:
+                json.dump(data, f, indent=2)
+            os.replace(tmp, self.path)
+        finally:
+            if os.path.exists(tmp):
+                os.unlink(tmp)
 
     def lookup(self, digest: str, backend: str,
                fingerprint: str) -> Optional[TuningRecord]:

@@ -21,6 +21,7 @@ from __future__ import annotations
 import dataclasses
 import hashlib
 import os
+import weakref
 from typing import Callable, Optional
 
 import jax
@@ -73,8 +74,35 @@ class CompiledProgram:
         `GraphContext` (warming them at bind time), and the distributed
         backend folds in the mesh / partition / `dist_meta` plumbing that
         previously had to go through `repro.core.dist.run` by hand
-        (`mesh=None` → one shard per local device)."""
-        return BoundProgram(self, g, mesh=mesh)
+        (`mesh=None` → one shard per local device).
+
+        Memoized per (program, graph) with weakref keying (the GraphContext
+        registry idiom): repeated binds on a serving query path return the
+        SAME `BoundProgram` as long as someone holds it, instead of
+        re-warming views and (distributed) re-building the jitted runner.
+        An explicit `mesh=` bypasses the cache (the mesh is caller state)."""
+        if mesh is not None:
+            return BoundProgram(self, g, mesh=mesh)
+        key = (id(self), id(g))
+        entry = _BIND_CACHE.get(key)
+        if entry is not None:
+            wp, wg, wb = entry
+            bound = wb()
+            if bound is not None and wp() is self and wg() is g:
+                return bound
+        bound = BoundProgram(self, g)
+
+        def _evict(_r, _k=key):
+            # only remove the entry this weakref belongs to: the key may
+            # have been re-filled after an id() reuse
+            cur = _BIND_CACHE.get(_k)
+            if cur is not None and (cur[2]() is None or cur[0]() is None
+                                    or cur[1]() is None):
+                _BIND_CACHE.pop(_k, None)
+
+        _BIND_CACHE[key] = (weakref.ref(self, _evict), weakref.ref(g, _evict),
+                            weakref.ref(bound, _evict))
+        return bound
 
 
 class BoundProgram:
@@ -135,6 +163,13 @@ def _exec_generated(src: str, fn_name: str, extra_env: Optional[dict] = None):
 # compile cache: (source digest, backend, schedule, fn_name, jit) -> program
 _COMPILE_CACHE: dict = {}
 
+# bind cache: (id(program), id(graph)) -> (wr(program), wr(graph), wr(bound)).
+# Everything is held WEAKLY: a BoundProgram keeps its graph alive, so the
+# cache must not keep the bound program alive (that would pin every graph
+# ever bound); when the caller drops the bound runner — or either key dies —
+# the entry evicts itself and the next bind rebuilds.
+_BIND_CACHE: dict = {}
+
 
 def compile_cache_clear() -> None:
     _COMPILE_CACHE.clear()
@@ -142,6 +177,14 @@ def compile_cache_clear() -> None:
 
 def compile_cache_size() -> int:
     return len(_COMPILE_CACHE)
+
+
+def bind_cache_clear() -> None:
+    _BIND_CACHE.clear()
+
+
+def bind_cache_size() -> int:
+    return len(_BIND_CACHE)
 
 
 def compile_program(source: str, backend: str = "local",

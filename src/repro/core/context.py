@@ -33,6 +33,7 @@ Schedule / GraphContext / compile-cache triad fits together.
 """
 from __future__ import annotations
 
+import dataclasses
 import hashlib
 import weakref
 from typing import Optional
@@ -75,6 +76,43 @@ class GraphContext:
     def view_keys(self) -> list:
         """The (kind, ...) keys of every view built so far (introspection)."""
         return sorted(self._views, key=repr)
+
+    # ---- memory accounting + eviction ------------------------------------
+    # views that are metadata (a digest string, a stats dict), not device
+    # memory: never worth evicting, and they key persisted tuning records
+    _META_VIEWS = ("fingerprint", "stats")
+
+    def view_nbytes(self) -> dict:
+        """Approximate bytes held by each built view, keyed like `_views`.
+
+        Counts array buffers (anything with `.nbytes`) reachable through
+        dataclass fields / dicts / sequences; scalars and strings count as
+        zero. The padded/dist views replicate the graph's own arrays, so
+        this measures what *eviction would free*, not unique residency."""
+        return {k: _approx_nbytes(v) for k, v in self._views.items()}
+
+    def total_view_nbytes(self) -> int:
+        """Approximate bytes held by every derived view (metadata views are
+        ~0 by construction)."""
+        return sum(self.view_nbytes().values())
+
+    def drop_view(self, key) -> bool:
+        """Forget one memoized view (it rebuilds lazily on next request).
+        Returns True when the key was present."""
+        return self._views.pop(key, None) is not None
+
+    def drop_derived_views(self) -> int:
+        """Evict every *derived* view (sliced-ELL, delta-ELL, padded ELL,
+        padded graphs, distributed partitions), keeping the metadata views
+        (`fingerprint`, `stats`) that key tuning records. Returns the
+        approximate bytes freed. Consumers resolve views through the
+        context per call, so the next query transparently re-prepares."""
+        freed = 0
+        for key in list(self._views):
+            if key[0] in self._META_VIEWS:
+                continue
+            freed += _approx_nbytes(self._views.pop(key))
+        return freed
 
     # ---- the derived structures ------------------------------------------
     def sliced_ell(self, schedule: Optional[Schedule] = None, *,
@@ -138,6 +176,33 @@ class GraphContext:
         (uniform degree, ``probe_depth`` at the cap, flat frontier) wants a
         single narrow bucket and a pinned sparse-frontier direction."""
         return self.view(("stats",), _graph_stats)
+
+
+# --------------------------------------------------------------------------
+# view memory accounting
+# --------------------------------------------------------------------------
+
+def _approx_nbytes(v, _seen=None) -> int:
+    """Bytes of array buffer reachable from a derived view: walks dataclass
+    fields (CSRGraph, EllGraph, SlicedEllGraph are all frozen dataclasses),
+    dicts (dist partitions), and sequences; an object with `.nbytes` is a
+    buffer and counted directly. Shared buffers are counted once."""
+    if _seen is None:
+        _seen = set()
+    if id(v) in _seen:
+        return 0
+    _seen.add(id(v))
+    nb = getattr(v, "nbytes", None)
+    if isinstance(nb, (int, np.integer)):
+        return int(nb)
+    if dataclasses.is_dataclass(v) and not isinstance(v, type):
+        return sum(_approx_nbytes(getattr(v, f.name), _seen)
+                   for f in dataclasses.fields(v))
+    if isinstance(v, dict):
+        return sum(_approx_nbytes(x, _seen) for x in v.values())
+    if isinstance(v, (list, tuple)):
+        return sum(_approx_nbytes(x, _seen) for x in v)
+    return 0
 
 
 # --------------------------------------------------------------------------

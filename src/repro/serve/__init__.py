@@ -1,3 +1,26 @@
-from .engine import GenerationResult, ServeEngine
+"""repro.serve — the serving layer; two engines live here.
 
-__all__ = ["GenerationResult", "ServeEngine"]
+* `graph_service.GraphService` — **the graph-analytics serving entry
+  point** (the repo's reason to exist): an async multi-tenant service
+  that coalesces concurrent SSSP/BFS/BC queries across users and graphs
+  into the engine's batched [N, B] SpMM lanes, with a `GraphPool` of
+  per-graph contexts (memory-bounded LRU view eviction), `TuningStore`
+  warm-reload on registration, and admission/deadline handling. See
+  ``docs/serving.md``.
+* `engine.ServeEngine` — the LM-demo serving engine for the transformer
+  examples (`examples/serve_lm.py`): batched greedy generation against
+  the decode path. Unrelated to graph queries.
+"""
+from .engine import GenerationResult, ServeEngine
+from .graph_service import (BUILTIN_KINDS, GraphService, QueryKind,
+                            ServiceClosed, ServiceConfig, ServiceError,
+                            ServiceOverloaded, ServiceTimeout, UnknownGraph,
+                            UnknownQueryKind)
+from .pool import GraphPool
+
+__all__ = [
+    "BUILTIN_KINDS", "GenerationResult", "GraphPool", "GraphService",
+    "QueryKind", "ServeEngine", "ServiceClosed", "ServiceConfig",
+    "ServiceError", "ServiceOverloaded", "ServiceTimeout", "UnknownGraph",
+    "UnknownQueryKind",
+]

@@ -1,4 +1,8 @@
-"""Minimal serving engine: batched greedy generation against the decode path.
+"""Minimal LM serving engine: batched greedy generation via the decode path.
+
+This is the *language-model demo* half of `repro.serve` — the
+graph-analytics serving entry point is `repro.serve.graph_service
+.GraphService` (async query coalescing into the engine's SpMM lanes).
 
 Production shape note: the dry-run's `serve_step` (launch/dryrun.py) is the
 deployable unit — one decode step over a static KV cache at the assigned

@@ -12,11 +12,12 @@ import re
 import pytest
 
 from repro.schedule import Schedule
+from repro.serve import ServiceConfig
 
 DOCS_DIR = os.path.join(os.path.dirname(__file__), "..", "docs")
 REPO_ROOT = os.path.join(os.path.dirname(__file__), "..")
 
-DOC_PAGES = ["architecture.md", "schedule.md", "dsl.md"]
+DOC_PAGES = ["architecture.md", "schedule.md", "dsl.md", "serving.md"]
 
 
 def _read(page):
@@ -53,6 +54,41 @@ def test_schedule_knob_defaults_documented_correctly():
         actual = defaults[name]
         # the doc may annotate the value (e.g. "0.0625 (1/16)"); the literal
         # before any annotation must equal repr/str of the actual default
+        lead = doc_default.split()[0].strip('"')
+        assert lead in (repr(actual), str(actual)), (
+            f"documented default for {name!r} is {doc_default!r}, "
+            f"actual is {actual!r}")
+
+
+def _serving_knob_section():
+    """The text of docs/serving.md's ServiceConfig section only (the page
+    has other tables — query kinds — that are not knob rows)."""
+    text = _read("serving.md")
+    m = re.search(r"## ServiceConfig knobs\n(.*?)(?:\n## |\Z)", text,
+                  re.DOTALL)
+    assert m, "docs/serving.md lost its '## ServiceConfig knobs' section"
+    return m.group(1)
+
+
+def test_serving_knob_table_matches_service_config_fields():
+    """Every `ServiceConfig` field has a knob-table row in docs/serving.md
+    and vice versa — adding a serving knob without documenting it fails."""
+    documented = set(re.findall(r"^\| `([a-z_]+)` \|",
+                                _serving_knob_section(), re.MULTILINE))
+    actual = {f.name for f in dataclasses.fields(ServiceConfig)}
+    assert documented == actual, (
+        f"docs/serving.md knob table is out of sync with ServiceConfig: "
+        f"undocumented={sorted(actual - documented)}, "
+        f"stale={sorted(documented - actual)}")
+
+
+def test_serving_knob_defaults_documented_correctly():
+    rows = re.findall(r"^\| `([a-z_]+)` \| [^|]+ \| `([^`]+)`",
+                      _serving_knob_section(), re.MULTILINE)
+    defaults = {f.name: f.default for f in dataclasses.fields(ServiceConfig)}
+    assert len(rows) == len(defaults), "knob table rows missing or unparsed"
+    for name, doc_default in rows:
+        actual = defaults[name]
         lead = doc_default.split()[0].strip('"')
         assert lead in (repr(actual), str(actual)), (
             f"documented default for {name!r} is {doc_default!r}, "

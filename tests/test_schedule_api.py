@@ -9,14 +9,15 @@ validation, post-compile mutation is inert); knob validation with
 actionable errors; the uniform `prog.bind(g)` calling convention on all
 three backends; and the `prepare` warm-up entry point.
 """
+import gc
 import warnings
 
 import numpy as np
 import pytest
 
-from repro.core import (Schedule, compile_bundled, compile_cache_clear,
-                        compile_program, get_context, load_program_source,
-                        prepare)
+from repro.core import (Schedule, bind_cache_clear, bind_cache_size,
+                        compile_bundled, compile_cache_clear, compile_program,
+                        get_context, load_program_source, prepare)
 from repro.graph import ENGINE, preferential_attachment
 from repro.graph.algorithms_ref import bc_ref, sssp_ref
 
@@ -258,6 +259,31 @@ def test_bind_distributed_bc_matches_oracle(g_pl):
 def test_bind_rejects_mesh_on_single_device_backends(g_pl):
     with pytest.raises(ValueError, match="mesh"):
         compile_bundled("sssp", backend="local").bind(g_pl, mesh=object())
+
+
+def test_bind_is_memoized_per_program_and_graph(g_pl):
+    """Repeated binds on a serving query path return the SAME BoundProgram
+    (no re-warming views, no rebuilding the jitted runner) — but the cache
+    holds everything weakly, so dropping the bound runner releases the
+    entry instead of pinning every graph ever bound."""
+    bind_cache_clear()
+    local = compile_bundled("sssp", backend="local")
+    pallas = compile_bundled("sssp", backend="pallas")
+    bound = local.bind(g_pl)
+    assert local.bind(g_pl) is bound
+    other = pallas.bind(g_pl)
+    assert other is not bound            # distinct program -> its own entry
+    assert pallas.bind(g_pl) is other
+    assert bind_cache_size() == 2
+    g2 = preferential_attachment(60, m=2, seed=9)
+    assert local.bind(g2) is not bound   # distinct graph -> its own entry
+    # all-weak entries: dropping the bound runner evicts, next bind rebuilds
+    del bound
+    gc.collect()
+    assert bind_cache_size() == 1        # only the still-held bind survives
+    rebound = local.bind(g_pl)
+    assert np.array_equal(np.asarray(rebound(src=0)["dist"]),
+                          sssp_ref(g_pl, 0).astype(np.int32))
 
 
 # --- prepare (explicit warm-up) -----------------------------------------------
