@@ -1,0 +1,9 @@
+"""``python -m repro.analyze`` — entry point shim for the analysis CLI.
+
+The implementation lives in :mod:`repro.core.analysis.cli`; this module
+only exists so the tool is reachable at the short, documented module path.
+"""
+from .core.analysis.cli import main
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -53,6 +53,7 @@ from typing import Callable, List, Optional, Union
 
 import numpy as np
 
+from .core.analysis import ERROR, check_schedule, program_analysis
 from .core.api import CompiledProgram
 from .core.context import get_context
 from .schedule import LANE_MULTIPLE, Schedule
@@ -321,6 +322,7 @@ class TuningRecord:
     budget: int
     seed: int
     graph_stats: dict = dataclasses.field(default_factory=dict)
+    pruned_candidates: int = 0  # statically illegal schedules skipped unmeasured
     version: int = RECORD_VERSION
 
     def key(self) -> tuple:
@@ -515,6 +517,24 @@ def autotune(prog: CompiledProgram, g, *, budget: int = 16, seed: int = 0,
     cands = search_space(stats, base=prog.schedule,
                          tune_batch=_has_set_param(prog),
                          backend=prog.backend)
+    # static legality pruning: candidates the analysis layer can reject
+    # (e.g. priority="delta" on a program with no monotone Min relax) are
+    # dropped before any trial budget is spent measuring them. Trial #0 —
+    # the program's own schedule — already passed the compile gate, so the
+    # baseline is never pruned.
+    fx = program_analysis(prog.dsl_source).functions.get(prog.name)
+    pruned = 0
+    if fx is not None:
+        legal = []
+        for cand in cands:
+            if any(d.severity == ERROR
+                   for d in check_schedule(fx, cand, prog.backend)):
+                pruned += 1
+            else:
+                legal.append(cand)
+        cands = legal
+    if verbose and pruned:
+        print(f"  pruned {pruned} statically illegal candidate(s)")
     if budget < 1:
         raise ValueError(f"budget must be >= 1, got {budget}")
     cands = cands[:budget]
@@ -543,7 +563,8 @@ def autotune(prog: CompiledProgram, g, *, budget: int = 16, seed: int = 0,
         graph_fingerprint=fingerprint, fn_name=prog.name,
         schedule=schedule_to_dict(best),
         best_ms=trials[best_i]["ms"], default_ms=trials[0]["ms"],
-        trials=trials, budget=budget, seed=seed, graph_stats=dict(stats))
+        trials=trials, budget=budget, seed=seed, graph_stats=dict(stats),
+        pruned_candidates=pruned)
     if store is not None:
         store.put(record)
         store.save()

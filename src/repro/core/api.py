@@ -29,9 +29,13 @@ import jax
 from ..graph.csr import resolve_schedule
 from ..schedule import Schedule
 from . import runtime as rt
+from .analysis import (DiagnosticError, check_schedule, entry_error,
+                       program_analysis, split)
 from .context import get_context
 from .lowering import lower
 from .parser import parse
+
+_BACKENDS = ("local", "pallas", "distributed")
 
 _PROGRAM_DIR = os.path.join(os.path.dirname(__file__), "programs")
 
@@ -54,6 +58,7 @@ class CompiledProgram:
     dist_meta: Optional[dict] = None   # distributed backend: output specs
     dsl_source: str = ""  # the StarPlat source this was compiled from
     jit: bool = True      # jit flag the program was compiled under
+    diagnostics: tuple = ()  # analysis findings that survived the gate
 
     def recompile(self, schedule: Schedule) -> "CompiledProgram":
         """The same algorithm under a different schedule — a compile-cache
@@ -191,6 +196,7 @@ def compile_program(source: str, backend: str = "local",
                     fn_name: Optional[str] = None, jit: bool = True,
                     schedule: Optional[Schedule] = None,
                     batch_sources: Optional[int] = None,
+                    strict: bool = False,
                     **backend_opts) -> CompiledProgram:
     """Compile a StarPlat program under an explicit `Schedule`.
 
@@ -201,8 +207,39 @@ def compile_program(source: str, backend: str = "local",
     yields byte-identical source and mutating `ENGINE` afterwards never
     changes an already-compiled program. Results are memoized — repeated
     identical calls return the same `CompiledProgram` object (unknown
-    `backend_opts` bypass the cache)."""
+    `backend_opts` bypass the cache).
+
+    Every compile — cache hits included — passes the static analysis gate
+    (`repro.core.analysis`): effect-analysis errors (races, non-terminating
+    fixed points) and illegal schedule combinations raise
+    `DiagnosticError` with stable SPxxx codes; `strict=True` promotes
+    warnings to errors.  Surviving warnings ride on the returned program's
+    `.diagnostics`."""
+    if backend not in _BACKENDS:
+        raise entry_error(
+            "SP301",
+            f"unknown backend {backend!r}; backends: {', '.join(_BACKENDS)}")
     sched = resolve_schedule(schedule, batch_sources=batch_sources)
+
+    # --- static analysis gate (runs before the cache: rejection must not
+    # depend on whether an earlier permissive call already compiled) -------
+    analysis = program_analysis(source)
+    if fn_name is not None and fn_name not in analysis.functions:
+        defined = ", ".join(analysis.functions) or "<none>"
+        raise entry_error(
+            "SP302",
+            f"program defines no function named {fn_name!r}; it "
+            f"defines: {defined}")
+    gate_name = fn_name if fn_name is not None \
+        else next(iter(analysis.functions))
+    fx = analysis.functions[gate_name]
+    diags = tuple(fx.diagnostics) + tuple(check_schedule(fx, sched, backend))
+    errors, warnings = split(diags)
+    if errors or (strict and warnings):
+        raise DiagnosticError(
+            diags, header=(f"analysis rejected {gate_name!r} "
+                           f"(backend={backend!r})"))
+
     cache_key = None
     if not backend_opts:
         digest = hashlib.sha256(source.encode()).hexdigest()
@@ -216,13 +253,7 @@ def compile_program(source: str, backend: str = "local",
     if fn_name is None:
         irfn = irfns[0]
     else:
-        matches = [f for f in irfns if f.name == fn_name]
-        if not matches:
-            defined = ", ".join(f.name for f in irfns) or "<none>"
-            raise ValueError(
-                f"program defines no function named {fn_name!r}; it "
-                f"defines: {defined}")
-        irfn = matches[0]
+        irfn = [f for f in irfns if f.name == fn_name][0]
 
     if backend == "local":
         from .codegen.local_jax import generate_local
@@ -232,12 +263,10 @@ def compile_program(source: str, backend: str = "local",
         from .codegen.distributed import generate_distributed
         body, extra_env = generate_distributed(irfn, schedule=sched,
                                                **backend_opts)
-    elif backend == "pallas":
+    else:
         from .codegen.pallas_backend import generate_pallas
         body, extra_env = generate_pallas(irfn, schedule=sched,
                                           **backend_opts)
-    else:
-        raise ValueError(f"unknown backend {backend!r}")
 
     src = _PRELUDE + body
     raw = _exec_generated(src, irfn.name, extra_env)
@@ -267,7 +296,7 @@ def compile_program(source: str, backend: str = "local",
         name=irfn.name, backend=backend, source=src, fn=fn, raw_fn=raw,
         ir=irfn, schedule=sched,
         dist_meta=(extra_env or {}).get("__dist_meta__"),
-        dsl_source=source, jit=jit)
+        dsl_source=source, jit=jit, diagnostics=diags)
     if cache_key is not None:
         _COMPILE_CACHE[cache_key] = prog
         if fn_name is None:
@@ -289,7 +318,8 @@ def load_program_source(name: str) -> str:
     cc); raises `ValueError` naming the bundled programs otherwise."""
     path = os.path.join(_PROGRAM_DIR, f"{name}.sp")
     if not os.path.exists(path):
-        raise ValueError(
+        raise entry_error(
+            "SP303",
             f"no bundled program named {name!r}; bundled programs: "
             f"{', '.join(bundled_programs())}")
     with open(path) as f:

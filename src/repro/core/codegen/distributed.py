@@ -57,6 +57,14 @@ from .base import (BFSCtx, CodegenError, EdgeCtx, ExprEmitter, HostCtx,
                    VertexCtx, pure_vertex_predicate, relax_candidate)
 from .local_jax import LocalCodegen
 
+# Ablation switch for the loop-invariant gather hoist: properties a BSP
+# loop body reads but never writes are gathered once before the loop
+# instead of once per superstep. `benchmarks/bench_analysis.py` flips this
+# off (with a compile-cache clear) to measure the pre-hoist exchange plan
+# on the same graph; it is not part of the Schedule because it is never
+# the better plan — only a measurement baseline.
+HOIST_INVARIANT = True
+
 _PARTITIONED_KEYS = ["esrc", "edst", "ew", "evalid", "esrc_local",
                      "idst", "isrc", "iw", "ivalid", "idst_local", "own_ids"]
 _REPLICATED_KEYS = ["out_degree_rep", "in_degree_rep", "edge_key_rep", "n_true_rep"]
@@ -126,6 +134,10 @@ class DistCodegen(LocalCodegen):
         # stack of property groups whose `{p}_full` views are carried
         # through the enclosing BSP loop (compact/auto exchange policies)
         self._full_stack = []
+        # stack of property groups the effect analysis proved loop-invariant
+        # (read but never written inside the BSP loop): gathered once before
+        # the loop under every policy, never re-exchanged per superstep
+        self._invariant_stack = []
         # (value_prop, window_mask_var) of the active delta-stepping
         # fixedPoint: emit_gathers priority-slices that prop's exchange
         self._delta_within = None
@@ -202,26 +214,47 @@ class DistCodegen(LocalCodegen):
     def _carried_fulls(self) -> set:
         return {p for grp in self._full_stack for p in grp}
 
+    def _invariant_fulls(self) -> set:
+        return {p for grp in self._invariant_stack for p in grp}
+
     @contextlib.contextmanager
     def _bsp_loop_fulls(self, stmts):
-        """Carry `{p}_full` gathered views across the supersteps of a BSP
-        loop: one initial dense gather per property read inside, then each
-        superstep's `emit_gathers` applies only the changed entries
-        (rtd.exchange). No-op under the dense policy — there the gathered
-        views are rebuilt from scratch every superstep."""
-        if self.schedule.dist_frontier == "dense":
-            yield
-            return
+        """Set up the `{p}_full` gathered views for one BSP loop.
+
+        Effect split (the compile-time effect analysis made precise at the
+        IR level): properties the loop reads but never writes are
+        *loop-invariant* — gathered once here, before the loop, under every
+        frontier policy, and never re-shipped per superstep (the view is a
+        closure constant of the loop body). Read-AND-written properties are
+        the actual BSP exchange set: under compact/auto their full views
+        are carried through the loop and each superstep's `emit_gathers`
+        applies only the changed entries (rtd.exchange); under dense they
+        are re-gathered from scratch every superstep."""
         carried = self._carried_fulls()
-        props = sorted(p for p in read_props(stmts)
-                       if p in self.dtypes and p not in carried)
-        for p in props:
+        hoisted = self._invariant_fulls()
+        written = I.written_vars(stmts)
+        reads = [p for p in sorted(read_props(stmts))
+                 if p in self.dtypes and p not in carried
+                 and p not in hoisted]
+        invariant = ([p for p in reads if p not in written]
+                     if HOIST_INVARIANT else [])
+        for p in invariant:
             self._emit_full_gather(p)
-        self._full_stack.append(props)
+        self._invariant_stack.append(invariant)
         try:
-            yield
+            if self.schedule.dist_frontier == "dense":
+                yield
+                return
+            props = [p for p in reads if p in written]
+            for p in props:
+                self._emit_full_gather(p)
+            self._full_stack.append(props)
+            try:
+                yield
+            finally:
+                self._full_stack.pop()
         finally:
-            self._full_stack.pop()
+            self._invariant_stack.pop()
 
     def _emit_full_gather(self, p: str):
         batched = self.batch is not None and p in self.batch.arrays
@@ -238,9 +271,12 @@ class DistCodegen(LocalCodegen):
         compiled `dist_frontier` policy; everything else takes the dense
         all-gather."""
         carried = self._carried_fulls()
+        hoisted = self._invariant_fulls()
         sched = self.schedule
         for p in sorted(read_props(stmts)):
             if p not in self.dtypes:   # unknown name (not a property)
+                continue
+            if p in hoisted:   # loop-invariant: gathered once before the loop
                 continue
             if p in carried:
                 batched = self.batch is not None and p in self.batch.arrays

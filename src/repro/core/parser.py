@@ -68,10 +68,11 @@ class Parser:
 
     # --- top level ----------------------------------------------------------
     def parse_program(self) -> Program:
+        first = self.peek().line
         functions = []
         while not self.at("eof"):
             functions.append(self.parse_function())
-        return Program(functions=functions)
+        return Program(functions=functions, line=first)
 
     def parse_function(self) -> Function:
         t = self.expect("kw", "function")
@@ -270,7 +271,8 @@ class Parser:
                                   reduce_op=REDUCE_ASSIGN[op], line=t.line)
         if self.accept("sym", "++"):
             self.expect("sym", ";")
-            return AssignmentStmt(lhs=lhs, rhs=Literal(value=1, kind="int"),
+            return AssignmentStmt(lhs=lhs,
+                                  rhs=Literal(value=1, kind="int", line=t.line),
                                   reduce_op="+", line=t.line)
         if self.accept("sym", "="):
             rhs = self.parse_expression()
@@ -364,4 +366,9 @@ class Parser:
 
 
 def parse(src: str) -> Program:
-    return Parser(src).parse_program()
+    prog = Parser(src).parse_program()
+    # plain attribute (not a dataclass field): `walk` never visits it, and
+    # downstream passes can quote offending source lines in diagnostics
+    prog.src_text = src
+    return prog
+

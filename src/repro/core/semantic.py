@@ -27,6 +27,14 @@ class SemanticError(Exception):
     pass
 
 
+def _quote(src: Optional[str], line: int) -> str:
+    """The 1-based source line, for inclusion in error messages."""
+    if not src or line <= 0:
+        return ""
+    lines = src.splitlines()
+    return lines[line - 1].strip() if line <= len(lines) else ""
+
+
 @dataclass
 class Symbol:
     name: str
@@ -63,10 +71,18 @@ class Analyzer:
     """Single-function analyzer. Walks the AST, building the symbol table and
     annotating nodes in place (adds `.sym`, `.resolved` attributes)."""
 
-    def __init__(self, fn: A.Function):
+    def __init__(self, fn: A.Function, src: Optional[str] = None):
         self.fn = fn
+        self.src = src
         self.info = FunctionInfo(name=fn.name)
         self.loop_depth = 0
+
+    def err(self, line: int, msg: str):
+        """Raise a SemanticError quoting the offending source line."""
+        where = f"line {line}: " if line else ""
+        quoted = _quote(self.src, line)
+        suffix = f"\n    | {quoted}" if quoted else ""
+        raise SemanticError(f"{where}{msg}{suffix}")
 
     def run(self) -> FunctionInfo:
         info = self.info
@@ -121,7 +137,7 @@ class Analyzer:
             sym = Symbol(d.name, "scalar", dtype=_DTYPE[ty.name],
                          decl_depth=self.loop_depth)
         else:
-            raise SemanticError(f"line {d.line}: cannot declare {ty.name} locally")
+            self.err(d.line, f"cannot declare {ty.name} locally")
         self.info.symbols[d.name] = sym
         return sym
 
@@ -182,7 +198,7 @@ class Analyzer:
     def _ident_name(self, e: A.Expression) -> str:
         if isinstance(e, A.Identifier):
             return e.name
-        raise SemanticError(f"line {e.line}: expected identifier")
+        self.err(e.line, "expected identifier")
 
     def _forall(self, s: A.ForallStmt):
         rng = s.range_call
@@ -196,15 +212,15 @@ class Analyzer:
                 sym = Symbol(it_name, "iter_nbr", decl_depth=self.loop_depth + 1,
                              source_iter=src, direction=direction)
             else:
-                raise SemanticError(f"line {s.line}: unknown range {rng.name}()")
+                self.err(s.line, f"unknown range {rng.name}()")
         elif isinstance(rng, A.Identifier):
             base = self.info.symbols.get(rng.name)
             if base is None or base.kind not in ("set_n", "set_e"):
-                raise SemanticError(f"line {s.line}: cannot iterate over {rng.name}")
+                self.err(s.line, f"cannot iterate over {rng.name}")
             sym = Symbol(it_name, "iter_set", decl_depth=self.loop_depth + 1,
                          source_iter=rng.name)
         else:
-            raise SemanticError(f"line {s.line}: bad forall range")
+            self.err(s.line, "bad forall range")
         saved = self.info.symbols.get(it_name)
         self.info.symbols[it_name] = sym
         s.iter_sym = sym
@@ -237,7 +253,7 @@ class Analyzer:
         if isinstance(e, A.Identifier):
             sym = self.info.symbols.get(e.name)
             if sym is None:
-                raise SemanticError(f"line {e.line}: undefined {e.name!r}")
+                self.err(e.line, f"undefined {e.name!r}")
             e.sym = sym
             if filter_iter and sym.kind in ("prop_node", "prop_edge"):
                 e.filter_sugar_iter = filter_iter   # means filter_iter.<prop>
@@ -265,4 +281,5 @@ class Analyzer:
 
 
 def analyze(prog: A.Program) -> Dict[str, FunctionInfo]:
-    return {fn.name: Analyzer(fn).run() for fn in prog.functions}
+    src = getattr(prog, "src_text", None)
+    return {fn.name: Analyzer(fn, src=src).run() for fn in prog.functions}

@@ -72,6 +72,8 @@ import numpy as np
 from ..autotune import TuningStore, source_digest
 from ..core import compile_bundled, load_program_source, prepare
 from ..core import runtime as rt
+from ..core.analysis import ERROR as ANALYSIS_ERROR
+from ..core.analysis import check_schedule, program_analysis
 from ..schedule import Schedule
 from .pool import GraphPool
 
@@ -400,6 +402,16 @@ class GraphService:
             sched = rec.best_schedule()
         except ValueError:
             return None          # stored schedule not valid here -> default
+        # legality gate on the reloaded schedule: a record tuned under an
+        # older analysis (or hand-edited on disk) may combine knobs the
+        # compile gate now rejects — fall back to the default rather than
+        # fail registration with a DiagnosticError
+        fx = program_analysis(
+            load_program_source(kind.program)).functions.get(rec.fn_name)
+        if fx is not None and any(
+                d.severity == ANALYSIS_ERROR
+                for d in check_schedule(fx, sched, self.config.backend)):
+            return None
         handle.tuned.append(kind.name)
         return sched
 

@@ -1,0 +1,17 @@
+// SP202 (under --schedule priority=delta): a monotone Min relax with no
+// edge weight in the candidate — every relaxation lands in the current
+// bucket, so delta-stepping degenerates to plain sweeps.
+function Bad_DeltaUnweighted(Graph g, propNode<int> comp, propNode<bool> modified) {
+    g.attachNodeProperty(comp = 0, modified = True);
+    forall(v in g.nodes()) {
+        v.comp = v;
+    }
+    bool finished = False;
+    fixedPoint until (finished : !modified) {
+        forall(v in g.nodes()) {
+            forall(nbr in g.nodesTo(v).filter(modified == True)) {
+                <v.comp, v.modified> = <Min(v.comp, nbr.comp), True>;
+            }
+        }
+    }
+}

@@ -1,0 +1,11 @@
+// SP203 (under --backend distributed --schedule dist_frontier=compact):
+// the writes are one-shot degree counts, not frontier-carried state — there
+// is no iterative construct for the compact exchange to carry views across.
+function Bad_Frontier(Graph g, propNode<int> deg) {
+    g.attachNodeProperty(deg = 0);
+    forall(v in g.nodes()) {
+        forall(nbr in g.neighbors(v)) {
+            v.deg += 1;
+        }
+    }
+}

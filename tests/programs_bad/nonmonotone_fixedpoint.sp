@@ -1,0 +1,15 @@
+// SP153: `dist` is updated through both Min and Max inside one fixedPoint —
+// the value can oscillate, so convergence is not provable and priority
+// scheduling would be unsound.
+function Bad_Monotone(Graph g, propNode<int> dist, propNode<bool> modified) {
+    g.attachNodeProperty(dist = INF, modified = True);
+    bool finished = False;
+    fixedPoint until (finished : !modified) {
+        forall(v in g.nodes()) {
+            forall(nbr in g.nodesTo(v).filter(modified == True)) {
+                <v.dist, v.modified> = <Min(v.dist, nbr.dist + 1), True>;
+                <v.dist, v.modified> = <Max(v.dist, nbr.dist - 1), True>;
+            }
+        }
+    }
+}

@@ -1,0 +1,11 @@
+// SP151: the convergence property `modified` is never written inside the
+// loop body — the fixedPoint can never terminate.
+function Bad_Converge(Graph g, propNode<int> dist, propNode<bool> modified) {
+    g.attachNodeProperty(dist = INF, modified = True);
+    bool finished = False;
+    fixedPoint until (finished : !modified) {
+        forall(v in g.nodes()) {
+            v.dist = 0;
+        }
+    }
+}

@@ -1,0 +1,9 @@
+// SP101: plain cross-vertex write under a parallel forall — two vertices
+// sharing a neighbor race on nbr.label (no reduction, no Min/Max sync).
+function Bad_Race(Graph g, propNode<int> label) {
+    forall(v in g.nodes()) {
+        forall(nbr in g.neighbors(v)) {
+            nbr.label = v.label;
+        }
+    }
+}

@@ -1,0 +1,8 @@
+// SP102: a function-scope scalar plain-assigned inside a parallel loop —
+// last-writer-wins, the result depends on iteration order.
+function Bad_ScalarRace(Graph g) {
+    int last = 0;
+    forall(v in g.nodes()) {
+        last = v;
+    }
+}

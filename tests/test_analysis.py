@@ -1,0 +1,336 @@
+"""Compile-time effect & legality analysis: SPxxx codes, the compile gate,
+the bad-program corpus, analyzer determinism, and the effects snapshots.
+
+The corpus under tests/programs_bad/ is golden: each .sp file documents the
+defect class in a header comment and must keep yielding exactly its SPxxx
+code — these are the analysis layer's regression anchors.
+"""
+import json
+import os
+
+import numpy as np
+import pytest
+
+from repro.core import compile_bundled, load_program_source
+from repro.core.analysis import (ERROR, REGISTRY, WARNING, Diagnostic,
+                                 DiagnosticError, analysis_cache_clear,
+                                 check_schedule, program_analysis)
+from repro.core.analysis.cli import main as analyze_main
+from repro.core.api import compile_program
+from repro.core.parser import parse
+from repro.core.semantic import SemanticError, analyze
+from repro.schedule import Schedule
+
+BAD_DIR = os.path.join(os.path.dirname(__file__), "programs_bad")
+ALL_PROGRAMS = ["bc", "cc", "pr", "sssp", "sssp_pull", "tc"]
+
+
+def _bad(name):
+    with open(os.path.join(BAD_DIR, f"{name}.sp")) as f:
+        return f.read()
+
+
+def _only_fx(source):
+    return next(iter(program_analysis(source).functions.values()))
+
+
+# --- the golden bad-program corpus -----------------------------------------
+
+@pytest.mark.parametrize("name,code,severity", [
+    ("race_cross_write", "SP101", ERROR),
+    ("scalar_race", "SP102", WARNING),
+    ("nonterminating_fixedpoint", "SP151", ERROR),
+    ("nonmonotone_fixedpoint", "SP153", WARNING),
+])
+def test_bad_corpus_program_diagnostics(name, code, severity):
+    fx = _only_fx(_bad(name))
+    assert [d.code for d in fx.diagnostics] == [code]
+    d = fx.diagnostics[0]
+    assert d.severity == severity
+    assert d.line > 0
+    assert d.source_line.strip(), "diagnostic must quote the offending line"
+
+
+@pytest.mark.parametrize("name,sched,backend,code", [
+    ("delta_unweighted", Schedule(priority="delta"), "local", "SP202"),
+    ("frontier_no_loop", Schedule(dist_frontier="compact"), "distributed",
+     "SP203"),
+])
+def test_bad_corpus_schedule_diagnostics(name, sched, backend, code):
+    fx = _only_fx(_bad(name))
+    assert fx.diagnostics == []     # the program alone is fine
+    assert [d.code for d in check_schedule(fx, sched, backend)] == [code]
+
+
+def test_race_corpus_rejected_by_compile_gate():
+    with pytest.raises(DiagnosticError) as ei:
+        compile_program(_bad("race_cross_write"))
+    assert ei.value.codes == ["SP101"]
+    assert isinstance(ei.value, ValueError)   # uniform error shape
+
+
+def test_warning_corpus_compiles_unless_strict():
+    prog = compile_program(_bad("scalar_race"))
+    assert [d.code for d in prog.diagnostics] == ["SP102"]
+    with pytest.raises(DiagnosticError):
+        compile_program(_bad("scalar_race"), strict=True)
+
+
+# --- bundled programs are clean ---------------------------------------------
+
+@pytest.mark.parametrize("name", ALL_PROGRAMS)
+def test_bundled_programs_strict_clean(name):
+    """Every bundled program passes --strict analysis under the default
+    schedule on every backend (the CI analyze step enforces the same)."""
+    fx = _only_fx(load_program_source(name))
+    assert fx.diagnostics == []
+    for backend in ("local", "pallas", "distributed"):
+        assert check_schedule(fx, Schedule(), backend) == []
+
+
+# --- schedule legality through the compile gate -----------------------------
+
+def test_delta_on_tc_rejected_at_compile_time():
+    with pytest.raises(DiagnosticError) as ei:
+        compile_bundled("tc", schedule=Schedule(priority="delta"))
+    assert "SP201" in ei.value.codes
+
+
+def test_delta_on_tc_rejected_even_after_permissive_compile():
+    """The gate runs before the compile cache: a prior legal compile must
+    not let an illegal (schedule, program) combination slip through."""
+    compile_bundled("tc")
+    for _ in range(2):
+        with pytest.raises(DiagnosticError):
+            compile_bundled("tc", schedule=Schedule(priority="delta"))
+
+
+def test_delta_on_unweighted_cc_warns_but_compiles():
+    prog = compile_bundled("cc", schedule=Schedule(priority="delta"))
+    assert [d.code for d in prog.diagnostics] == ["SP202"]
+    with pytest.raises(DiagnosticError) as ei:
+        compile_bundled("cc", schedule=Schedule(priority="delta"),
+                        strict=True)
+    assert "SP202" in ei.value.codes
+
+
+@pytest.mark.parametrize("kwargs,backend,code", [
+    (dict(delta_bucket=8), "local", "SP207"),
+    (dict(direction="push"), "local", "SP205"),
+    (dict(dist_frontier="compact", dist_gather_frac=0.75), "distributed",
+     "SP206"),
+    (dict(batch_sources=4), "local", "SP204"),
+])
+def test_schedule_warnings_on_tc(kwargs, backend, code):
+    fx = _only_fx(load_program_source("tc"))
+    codes = [d.code for d in check_schedule(fx, Schedule(**kwargs), backend)]
+    assert code in codes
+
+
+def test_default_batch_sources_not_flagged():
+    """The ambient default (batch_sources=32) must not warn on programs
+    without a source-set loop — only explicit nonstandard values do."""
+    fx = _only_fx(load_program_source("sssp"))
+    assert check_schedule(fx, Schedule(), "local") == []
+
+
+# --- entry errors share the Diagnostic shape --------------------------------
+
+def test_unknown_backend_is_sp301():
+    with pytest.raises(DiagnosticError) as ei:
+        compile_program(load_program_source("sssp"), backend="cuda")
+    assert ei.value.codes == ["SP301"]
+
+
+def test_unknown_fn_is_sp302():
+    with pytest.raises(DiagnosticError) as ei:
+        compile_program(load_program_source("sssp"), fn_name="nope")
+    assert ei.value.codes == ["SP302"]
+    assert "Compute_SSSP" in str(ei.value)
+
+
+def test_unknown_bundled_is_sp303():
+    with pytest.raises(DiagnosticError) as ei:
+        load_program_source("dijkstra")
+    assert ei.value.codes == ["SP303"]
+
+
+# --- determinism and snapshots ----------------------------------------------
+
+def test_analyzer_is_deterministic():
+    for name in ALL_PROGRAMS:
+        src = load_program_source(name)
+        analysis_cache_clear()
+        a = json.dumps(program_analysis(src).summary(), sort_keys=True)
+        analysis_cache_clear()
+        b = json.dumps(program_analysis(src).summary(), sort_keys=True)
+        assert a == b, name
+
+
+# (reads, writes, reductions, minmax kinds) per property in the function
+# root region, plus the structural flags — the effects-sets snapshot for
+# every bundled program. Update deliberately when the analysis changes.
+SNAPSHOT = {
+    "bc": {
+        "flags": dict(has_set_loop=True, has_bfs=True, has_iter_loop=True,
+                      has_relax=True, delta_target=None),
+        "props": {"BC": (0, 2, ["+"], []), "delta": (2, 2, ["+"], []),
+                  "sigma": (3, 3, ["+"], [])},
+        "fixedpoints": [],
+    },
+    "cc": {
+        "flags": dict(has_set_loop=False, has_bfs=False, has_iter_loop=True,
+                      has_relax=True, delta_target="comp"),
+        "props": {"comp": (2, 3, [], ["Min"]), "modified": (2, 2, [], [])},
+        "fixedpoints": [("modified", [("comp", "Min", "int32", False, True)])],
+    },
+    "pr": {
+        "flags": dict(has_set_loop=False, has_bfs=False, has_iter_loop=True,
+                      has_relax=False, delta_target=None),
+        "props": {"pageRank": (2, 2, [], []), "pageRank_nxt": (1, 1, [], [])},
+        "fixedpoints": [],
+    },
+    "sssp": {
+        "flags": dict(has_set_loop=False, has_bfs=False, has_iter_loop=True,
+                      has_relax=True, delta_target="dist"),
+        "props": {"dist": (2, 3, [], ["Min"]), "modified": (2, 3, [], []),
+                  "weight": (1, 0, [], [])},
+        "fixedpoints": [("modified", [("dist", "Min", "int32", True, True)])],
+    },
+    "sssp_pull": {
+        "flags": dict(has_set_loop=False, has_bfs=False, has_iter_loop=True,
+                      has_relax=True, delta_target="dist"),
+        "props": {"dist": (2, 3, [], ["Min"]), "modified": (2, 3, [], []),
+                  "weight": (1, 0, [], [])},
+        "fixedpoints": [("modified", [("dist", "Min", "int32", True, True)])],
+    },
+    "tc": {
+        "flags": dict(has_set_loop=False, has_bfs=False, has_iter_loop=False,
+                      has_relax=False, delta_target=None),
+        "props": {},
+        "fixedpoints": [],
+    },
+}
+
+
+@pytest.mark.parametrize("name", ALL_PROGRAMS)
+def test_effects_snapshot(name):
+    fx = _only_fx(load_program_source(name))
+    want = SNAPSHOT[name]
+    s = fx.summary()
+    assert s["flags"] == want["flags"], name
+    got_props = {p: (v["reads"], v["self_writes"] + v["cross_writes"],
+                     v["reductions"], v["minmax"])
+                 for p, v in s["region"]["props"].items()}
+    assert got_props == want["props"], name
+    got_fps = [(fp.conv_prop,
+                [(t.prop, t.kind, t.dtype, t.weighted, t.monotone)
+                 for t in fp.targets]) for fp in fx.fixedpoints]
+    assert got_fps == want["fixedpoints"], name
+
+
+# --- source positions --------------------------------------------------------
+
+def test_semantic_error_quotes_source_line():
+    with pytest.raises(SemanticError) as ei:
+        analyze(parse("function f(Graph g) {\n  oops = 1;\n}"))
+    msg = str(ei.value)
+    assert "line 2" in msg and "oops = 1;" in msg
+
+
+def test_race_diagnostic_quotes_source_line():
+    fx = _only_fx(_bad("race_cross_write"))
+    d = fx.diagnostics[0]
+    assert "nbr.label" in d.source_line
+    assert f"line {d.line}" in d.format()
+
+
+# --- Diagnostic value object -------------------------------------------------
+
+def test_diagnostic_round_trip():
+    fx = _only_fx(_bad("nonmonotone_fixedpoint"))
+    for d in fx.diagnostics:
+        assert Diagnostic.from_dict(d.to_dict()) == d
+
+
+def test_registry_severities_are_valid():
+    for code, (sev, desc) in REGISTRY.items():
+        assert sev in (ERROR, WARNING), code
+        assert desc, code
+        assert code.startswith("SP") and code[2:].isdigit(), code
+
+
+# --- CLI ---------------------------------------------------------------------
+
+def test_cli_bundled_strict_clean(capsys):
+    assert analyze_main(["--bundled", "--strict"]) == 0
+    out = capsys.readouterr().out
+    assert "0 error(s), 0 warning(s)" in out
+
+
+def test_cli_reports_error_exit(capsys):
+    path = os.path.join(BAD_DIR, "race_cross_write.sp")
+    assert analyze_main([path]) == 1
+    assert "SP101" in capsys.readouterr().out
+
+
+def test_cli_strict_promotes_warnings(capsys):
+    path = os.path.join(BAD_DIR, "scalar_race.sp")
+    assert analyze_main([path]) == 0
+    assert analyze_main([path, "--strict"]) == 1
+
+
+def test_cli_schedule_knobs(capsys):
+    assert analyze_main(["tc", "--schedule", "priority=delta"]) == 1
+    assert "SP201" in capsys.readouterr().out
+
+
+def test_cli_json_round_trip(capsys):
+    path = os.path.join(BAD_DIR, "nonmonotone_fixedpoint.sp")
+    assert analyze_main([path, "--json"]) == 0   # SP153 is a warning
+    payload = json.loads(capsys.readouterr().out)
+    [target] = payload["targets"]
+    diags = [Diagnostic.from_dict(d) for d in target["diagnostics"]]
+    assert [d.code for d in diags] == ["SP153"]
+    # summaries are JSON-stable
+    assert json.loads(json.dumps(target["functions"])) == target["functions"]
+
+
+# --- autotune integration ----------------------------------------------------
+
+def test_tuning_record_gains_pruned_candidates_field():
+    from repro.autotune import TuningRecord
+    rec = TuningRecord(source_digest="d", backend="local",
+                       graph_fingerprint="f", fn_name="fn", schedule={},
+                       best_ms=1.0, default_ms=1.0, trials=[], budget=1,
+                       seed=0)
+    assert rec.pruned_candidates == 0
+    # old persisted records (no field) load with the default
+    d = rec.to_dict()
+    d.pop("pruned_candidates")
+    assert TuningRecord.from_dict(d).pruned_candidates == 0
+
+
+def test_autotune_prunes_illegal_delta_candidates():
+    """On a deep weighted grid the search space proposes priority="delta"
+    candidates; for bc (no monotone Min relax) every one is statically
+    illegal and must be pruned unmeasured rather than exploding in
+    DiagnosticError mid-measurement."""
+    from repro.autotune import autotune, search_space
+    from repro.core.context import get_context
+    from repro.graph.generators import road
+    g = road(24, seed=3)   # deep enough for delta-stepping candidates
+    stats = get_context(g).stats()
+    prog = compile_bundled("bc")
+    n_delta = sum(1 for c in search_space(stats, base=prog.schedule,
+                                          tune_batch=True)
+                  if c.priority == "delta")
+    if n_delta == 0:
+        pytest.skip("search space proposed no delta candidates here")
+    srcs = np.arange(4, dtype=np.int32)
+    r = autotune(prog, g, budget=32, seed=0,
+                 params={"sourceSet": srcs},
+                 measure=lambda bound, p: 1.0)
+    assert r.record.pruned_candidates >= n_delta
+    assert all(t["schedule"]["priority"] == "none"
+               for t in r.record.trials)

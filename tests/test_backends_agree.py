@@ -181,18 +181,16 @@ def test_delta_schedule_powerlaw_agrees_with_monotonic(name, g_powerlaw):
             f"{name}.{key}"
 
 
-def test_bc_batched_under_delta_schedule(g_powerlaw):
-    """batch_sources > 1 disables the delta lowering (batched lanes advance
-    buckets independently) — the schedule must still compile and agree."""
-    srcs = np.arange(0, g_powerlaw.num_nodes,
-                     max(g_powerlaw.num_nodes // 9, 1), np.int32)
+def test_bc_under_delta_schedule_rejected_at_compile_time():
+    """bc has no monotone Min-relax fixedPoint, so priority="delta" is a
+    static SP201 error — previously the delta lowering was silently skipped
+    (batched lanes advance buckets independently); now the analysis gate
+    rejects the unsound knob before any code is generated."""
+    from repro.core.analysis import DiagnosticError
     sched = Schedule(priority="delta", delta_bucket=64, batch_sources=4)
-    out_b = compile_bundled("bc", backend="local", schedule=sched)(
-        g_powerlaw, sourceSet=srcs)
-    out_s = compile_bundled("bc", backend="local", batch_sources=1)(
-        g_powerlaw, sourceSet=srcs)
-    np.testing.assert_allclose(np.asarray(out_b["BC"]),
-                               np.asarray(out_s["BC"]), rtol=1e-4, atol=1e-4)
+    with pytest.raises(DiagnosticError) as ei:
+        compile_bundled("bc", backend="local", schedule=sched)
+    assert "SP201" in ei.value.codes
 
 
 def test_delta_schedules_differ_in_source_only_by_knobs(g_grid):

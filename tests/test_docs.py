@@ -17,7 +17,8 @@ from repro.serve import ServiceConfig
 DOCS_DIR = os.path.join(os.path.dirname(__file__), "..", "docs")
 REPO_ROOT = os.path.join(os.path.dirname(__file__), "..")
 
-DOC_PAGES = ["architecture.md", "schedule.md", "dsl.md", "serving.md"]
+DOC_PAGES = ["architecture.md", "schedule.md", "dsl.md", "serving.md",
+             "analysis.md"]
 
 
 def _read(page):
@@ -130,6 +131,22 @@ def test_readme_relative_links_resolve():
         path = target.split("#")[0]
         resolved = os.path.normpath(os.path.join(REPO_ROOT, path))
         assert os.path.exists(resolved), f"README: dead link {target!r}"
+
+
+def test_analysis_code_table_matches_registry():
+    """Every `SPxxx` code in the diagnostics registry has a table row in
+    docs/analysis.md with the matching severity, and vice versa — adding a
+    diagnostic without documenting it fails."""
+    from repro.core.analysis import REGISTRY
+    rows = re.findall(r"^\| `(SP\d+)` \| (error|warning) \|",
+                      _read("analysis.md"), re.MULTILINE)
+    documented = {code: sev for code, sev in rows}
+    actual = {code: sev for code, (sev, _) in REGISTRY.items()}
+    assert documented == actual, (
+        f"docs/analysis.md code table is out of sync with the diagnostics "
+        f"registry: undocumented={sorted(set(actual) - set(documented))}, "
+        f"stale={sorted(set(documented) - set(actual))}, "
+        f"severity_drift={sorted(c for c in set(actual) & set(documented) if actual[c] != documented[c])}")
 
 
 def test_docs_wikilinks_resolve():
