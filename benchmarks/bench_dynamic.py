@@ -1,0 +1,233 @@
+"""Dynamic-graph benchmark: incremental `refresh` vs from-scratch recompute.
+
+A 12k-vertex power-law graph absorbs a stream of write batches of
+increasing size. After each `g.update(adds, dels)` the SSSP program is
+re-run two ways on the new version:
+
+  * **full** — `bound(src=0)` from scratch, and
+  * **refresh** — `bound.refresh(prev, delta, src=0)` warm-started from
+    the previous version's distances, with the deletion cone reset and
+    the sweep seeded only at update-incident vertices
+    (`Schedule(refresh_threshold_frac=1.0)` forces the incremental path
+    so every batch size is measured through it; `affected_frac` in the
+    output shows where the default 0.25 threshold would have fallen back
+    to the dense recompute instead).
+
+Two comparisons per batch, the refreshed answer asserted identical to
+the from-scratch answer every time:
+
+  * ``wall_ms`` — measured wall-clock of both paths (both warmed on the
+    same graph version first, so retracing is excluded).
+  * ``edges_relaxed`` — a host-side numpy replay of the monotone relax
+    sweep counting frontier out-edges: cold starts from {src}, warm
+    starts from the refresh plan's seed with its reset applied. This is
+    the actual relaxation work each path performs; for insert-only
+    batches the warm count must be strictly lower (asserted).
+
+Deletions reset the conservative forward closure of the deleted edges'
+heads, and on a low-diameter power-law graph that cone is most of the
+vertex set — so delete-heavy batches land near ``affected_frac == 1``
+and approach full-recompute work. That regime is included deliberately:
+it is exactly what `refresh_threshold_frac` exists to gate (the default
+0.25 sends such batches down the dense path), while insert-heavy
+batches seed only the new edges' sources and relax a small fraction of
+the cold run's edges.
+
+    PYTHONPATH=src python benchmarks/bench_dynamic.py [--tiny]
+
+Emits BENCH_dynamic.json at the repo root (full run only).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+import numpy as np
+
+sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
+from common import timeit as _timeit_us  # noqa: E402
+
+from repro.core import Schedule, compile_bundled  # noqa: E402
+from repro.graph import powerlaw_social  # noqa: E402
+
+OUT_PATH = os.path.join(os.path.dirname(__file__), "..", "BENCH_dynamic.json")
+INF = np.int64(2**30)
+
+
+def random_batch(rng, g, k_add, k_del):
+    """k_add genuinely-new edges + k_del existing edges. New pairs are
+    rejection-sampled: re-adding an existing pair is a weight
+    *replacement* (removal + addition), which would reset a deletion
+    cone and turn an "insert-only" batch into a delete."""
+    n = g.num_nodes
+    existing = set(zip(np.asarray(g.edge_src).tolist(),
+                       np.asarray(g.indices).tolist()))
+    adds = []
+    while len(adds) < k_add:
+        u, v = int(rng.integers(0, n)), int(rng.integers(0, n))
+        if u != v and (u, v) not in existing:
+            existing.add((u, v))
+            adds.append((u, v))
+    adds = np.array(adds, np.int64)
+    weights = rng.integers(1, 10, k_add)
+    idx = rng.choice(g.num_edges, min(k_del, g.num_edges), replace=False)
+    dels = np.stack([np.asarray(g.edge_src)[idx],
+                     np.asarray(g.indices)[idx]], 1)
+    return adds, dels, weights
+
+
+def replay_edges(g, dist0, frontier0):
+    """Monotone relax sweep on the host, counting frontier out-edges —
+    the same rule the lowered fixedPoint runs, so the edge count is the
+    work either path performs."""
+    out_deg = np.diff(np.asarray(g.indptr))
+    indices, edge_src = np.asarray(g.indices), np.asarray(g.edge_src)
+    wts = np.asarray(g.weights, np.int64)
+    dist = np.asarray(dist0, np.int64).copy()
+    front = frontier0.copy()
+    edges = 0
+    while front.any():
+        edges += int(out_deg[front].sum())
+        fe = front[edge_src]
+        cand = np.full(len(dist), INF, np.int64)
+        np.minimum.at(cand, indices[fe], dist[edge_src[fe]] + wts[fe])
+        improved = cand < dist
+        dist = np.minimum(dist, cand)
+        front = improved
+    return edges, dist
+
+
+def work_metric(delta, prev_dist, src):
+    """edges_relaxed for cold-from-src vs warm-from-seed on delta.graph."""
+    g2 = delta.graph
+    n = g2.num_nodes
+    plan = delta.plan()
+
+    cold_front = np.zeros(n, bool)
+    cold_front[src] = True
+    cold_dist = np.full(n, INF, np.int64)
+    cold_dist[src] = 0
+    cold_edges, cold = replay_edges(g2, cold_dist, cold_front)
+
+    warm_dist = np.asarray(prev_dist, np.int64).copy()
+    warm_dist[plan.reset] = INF
+    warm_dist[src] = 0
+    warm_edges, warm = replay_edges(g2, warm_dist, plan.seed.copy())
+    assert np.array_equal(cold, warm), "warm replay reached a different fixpoint"
+    return cold_edges, warm_edges, cold
+
+
+def bench_backend(backend, g0, batch_sizes, reps, seed, measure_work):
+    prog = compile_bundled("sssp", backend=backend,
+                           schedule=Schedule(refresh_threshold_frac=1.0))
+    rng = np.random.default_rng(seed)
+    g = g0
+    prev = prog.bind(g)(src=0)
+    rows = []
+    for label, k_add, k_del in batch_sizes:
+        adds, dels, w = random_batch(rng, g, k_add, k_del)
+        delta = g.update(adds, dels, weights=w)
+        plan = delta.plan()
+        bound = prog.bind(delta.graph)
+
+        # warm both paths on this version, then measure
+        bound(src=0)
+        bound.refresh(prev, delta, src=0)
+        full_us, scratch = _timeit_us(lambda: bound(src=0), reps=reps)
+        refresh_us, refreshed = _timeit_us(
+            lambda: bound.refresh(prev, delta, src=0), reps=reps)
+        sd = np.asarray(scratch["dist"])
+        rd = np.asarray(refreshed["dist"])
+        assert np.array_equal(sd, rd), \
+            f"{backend}/{label}: refresh disagrees with from-scratch"
+
+        row = {
+            "batch": label, "k_add": k_add, "k_del": k_del,
+            "effective_added": delta.num_added,
+            "effective_removed": delta.num_removed,
+            "affected_frac": round(plan.affected_frac, 4),
+            "cone_size": plan.cone_size,
+            "full_ms": round(full_us / 1e3, 3),
+            "refresh_ms": round(refresh_us / 1e3, 3),
+            "wall_speedup": round(full_us / max(refresh_us, 1e-9), 3),
+        }
+        if measure_work:
+            cold_e, warm_e, replay = work_metric(delta, prev["dist"], src=0)
+            assert np.array_equal(
+                np.where(sd.astype(np.int64) >= INF, INF,
+                         sd.astype(np.int64)), replay), \
+                f"{backend}/{label}: replay disagrees with compiled output"
+            row.update({
+                "cold_edges_relaxed": cold_e,
+                "warm_edges_relaxed": warm_e,
+                "work_ratio": round(cold_e / max(warm_e, 1), 2),
+            })
+        rows.append(row)
+        print(f"[{backend}] {label:7s} adds={k_add:4d} dels={k_del:4d} "
+              f"affected={plan.affected_frac:6.3f}  "
+              f"full={row['full_ms']:8.2f}ms refresh={row['refresh_ms']:8.2f}ms"
+              + (f"  edges {cold_e}->{warm_e}" if measure_work else ""))
+        g, prev = delta.graph, refreshed
+    return rows
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--tiny", action="store_true",
+                    help="CI-sized graph + reps (no JSON emitted)")
+    args = ap.parse_args()
+
+    if args.tiny:
+        n, avg_degree, reps = 400, 8, 1
+        batch_sizes = [("small-ins", 4, 0), ("mixed", 16, 12)]
+    else:
+        n, avg_degree, reps = 12000, 8, 3
+        batch_sizes = [("small-ins", 8, 0), ("small-ins", 8, 0),
+                       ("medium-ins", 64, 0),
+                       ("mixed", 64, 48), ("large", 512, 384)]
+
+    g0 = powerlaw_social(n, avg_degree=avg_degree, seed=7)
+    print(f"graph: powerlaw n={g0.num_nodes} m={g0.num_edges}")
+
+    results = {
+        "config": {"tiny": args.tiny, "reps": reps, "num_nodes": g0.num_nodes,
+                   "num_edges": g0.num_edges},
+        "note": ("Each batch: g.update -> full recompute vs "
+                 "bound.refresh(prev, delta) on the new version, answers "
+                 "asserted identical. edges_relaxed comes from a host "
+                 "replay of the monotone relax sweep (cold from {src} vs "
+                 "warm from the refresh plan's seed); affected_frac is "
+                 "the seed fraction the 0.25 default threshold gates on. "
+                 "Delete-heavy batches reset a conservative forward cone "
+                 "that covers most of a low-diameter graph (high "
+                 "affected_frac) — the regime the threshold routes to "
+                 "the dense path; insert-only batches show the "
+                 "incremental win."),
+        "backends": {}}
+    for backend in ("local", "pallas"):
+        results["backends"][backend] = bench_backend(
+            backend, g0, batch_sizes, reps,
+            seed=11, measure_work=(backend == "local"))
+
+    # acceptance: insert-only small batches must beat full recompute on
+    # the work axis (structurally true: the seed is a handful of sources)
+    small = [r for r in results["backends"]["local"]
+             if r["batch"].endswith("-ins")]
+    for r in small:
+        assert r["warm_edges_relaxed"] < r["cold_edges_relaxed"], r
+    best = max(small, key=lambda r: r["work_ratio"])
+    print(f"insert-batch work ratio up to x{best['work_ratio']} "
+          f"(edges relaxed {best['cold_edges_relaxed']} -> "
+          f"{best['warm_edges_relaxed']}), "
+          f"wall x{best['wall_speedup']}")
+
+    if not args.tiny:
+        with open(OUT_PATH, "w") as f:
+            json.dump(results, f, indent=2)
+        print(f"wrote {os.path.normpath(OUT_PATH)}")
+
+
+if __name__ == "__main__":
+    main()

@@ -69,6 +69,9 @@ REGISTRY: Dict[str, Tuple[str, str]] = {
     "SP207": (WARNING,
               "delta_bucket set to a non-default value while "
               "priority=\"none\"; the knob has no effect"),
+    "SP208": (WARNING,
+              "refresh_threshold_frac set to a non-default value but the "
+              "program has no iterative construct to warm-start"),
     "SP301": (ERROR, "unknown backend"),
     "SP302": (ERROR, "program defines no function with the requested name"),
     "SP303": (ERROR, "no bundled program with the requested name"),

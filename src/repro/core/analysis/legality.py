@@ -88,4 +88,15 @@ def check_schedule(fx: FunctionEffects, schedule: Schedule,
             f"priority=\"none\"",
             fn=fn))
 
+    if (s.refresh_threshold_frac != _DEFAULTS.refresh_threshold_frac
+            and not fx.has_iter_loop):
+        out.append(diag(
+            "SP208",
+            f"refresh_threshold_frac={s.refresh_threshold_frac} set "
+            f"explicitly but {fn!r} has no iterative construct (fixedPoint "
+            f"/ while / do-while / BFS) to warm-start — "
+            f"`BoundProgram.refresh` raises on this program and the knob "
+            f"does nothing",
+            fn=fn))
+
     return out

@@ -59,6 +59,11 @@ class CompiledProgram:
     dsl_source: str = ""  # the StarPlat source this was compiled from
     jit: bool = True      # jit flag the program was compiled under
     diagnostics: tuple = ()  # analysis findings that survived the gate
+    # jitted `<name>__refresh` wrapper (same calling convention as `fn`,
+    # plus _warm/_reset/_seed), or None when the program has no top-level
+    # iterative construct to warm-start. Call through
+    # `BoundProgram.refresh`, which derives the seeding from a GraphDelta.
+    refresh_fn: Optional[Callable] = None
 
     def recompile(self, schedule: Schedule) -> "CompiledProgram":
         """The same algorithm under a different schedule — a compile-cache
@@ -148,6 +153,48 @@ class BoundProgram:
         return dist.run_prepared(prog, self._gd, self.mesh,
                                  num_nodes=self.graph.num_nodes, **params)
 
+    def refresh(self, prev: dict, delta, /, **params):
+        # prev/delta are positional-only: program params are free to reuse
+        # the names (PR's damping factor is literally called `delta`)
+        """Incremental recompute after `g.update()`: the previous result
+        warm-starts the program's iterative construct instead of running it
+        from the cold init.
+
+        `prev` is a prior result dict of the SAME program (on the
+        pre-update graph), `delta` the `GraphDelta` whose `.graph` this
+        program is bound to. The delta's `plan()` supplies the seeding:
+        previous per-node values are kept except in the deletion cone
+        (reset to cold init), and the first sweep's frontier is the
+        update-incident seed set. When the affected fraction of N exceeds
+        `Schedule.refresh_threshold_frac`, the warm start would touch most
+        of the graph anyway, so this falls back to a dense from-scratch
+        run — either path returns the same converged result dict a plain
+        call would."""
+        prog = self.program
+        if prog.backend == "distributed":
+            raise ValueError(
+                "refresh is a local/pallas entry point; recompute "
+                "distributed programs from scratch after an update")
+        if prog.refresh_fn is None:
+            raise ValueError(
+                f"{prog.name!r} has no incremental refresh: the program "
+                "has no top-level iterative construct (fixedPoint / while "
+                "/ do-while) to warm-start")
+        if delta.graph is not self.graph:
+            raise ValueError(
+                "refresh must run on the post-update graph: bind the "
+                "program to delta.graph and pass the matching delta")
+        plan = delta.plan()
+        if plan.affected_frac > prog.schedule.refresh_threshold_frac:
+            return self(**params)
+        n = self.graph.num_nodes
+        warm = {k: v for k, v in prev.items()
+                if getattr(v, "shape", None) == (n,)}
+        import jax.numpy as jnp
+        return prog.refresh_fn(self.graph, _warm=warm,
+                               _reset=jnp.asarray(plan.reset),
+                               _seed=jnp.asarray(plan.seed), **params)
+
     def __repr__(self):
         g = self.graph
         return (f"BoundProgram({self.program.name!r}, "
@@ -156,13 +203,16 @@ class BoundProgram:
 
 
 def _exec_generated(src: str, fn_name: str, extra_env: Optional[dict] = None):
+    """Exec the generated module source; returns its namespace (the main
+    function plus, when emitted, the `<name>__refresh` incremental
+    variant)."""
     import jax.numpy as jnp
     env = {"jax": jax, "jnp": jnp, "rt": rt}
     if extra_env:
         env.update(extra_env)
     code = compile(src, f"<starplat:{fn_name}>", "exec")
     exec(code, env)
-    return env[fn_name]
+    return env
 
 
 # compile cache: (source digest, backend, schedule, fn_name, jit) -> program
@@ -269,34 +319,45 @@ def compile_program(source: str, backend: str = "local",
                                           **backend_opts)
 
     src = _PRELUDE + body
-    raw = _exec_generated(src, irfn.name, extra_env)
+    env = _exec_generated(src, irfn.name, extra_env)
+    raw = env[irfn.name]
+    raw_refresh = env.get(f"{irfn.name}__refresh")
+
     # CSRGraph is a registered pytree with static num_nodes/num_edges metadata,
     # so the graph argument is dynamic (arrays) + static (sizes) automatically.
-    if backend == "pallas":
-        jitted = jax.jit(raw) if jit else raw
+    def _wrap(raw_fn):
+        if backend == "pallas":
+            jitted = jax.jit(raw_fn) if jit else raw_fn
 
-        def fn(g, *, _jitted=jitted, _sched=sched, **kw):
-            # degree-bucketed reverse (in-edge) view, owned by the graph's
-            # shared GraphContext — built once per (graph, layout), shared
-            # with every other program compiled under the same layout.
-            ell = get_context(g).sliced_ell(_sched, reverse=True)
-            return _jitted(g, ell, **kw)
-    elif backend == "local" and \
-            f"def {irfn.name}({irfn.graph_param}, _dell" in body:
-        # delta-stepping program: the generated function takes the padded
-        # forward-ELL view its compact bucket relax gathers frontier
-        # out-rows from (None on hub-heavy graphs → dense fallback)
-        jitted = jax.jit(raw) if jit else raw
+            def fn(g, *, _jitted=jitted, _sched=sched, **kw):
+                # degree-bucketed reverse (in-edge) view, owned by the
+                # graph's shared GraphContext — built once per (graph,
+                # layout), shared with every other program compiled under
+                # the same layout.
+                ell = get_context(g).sliced_ell(_sched, reverse=True)
+                return _jitted(g, ell, **kw)
+            return fn
+        if backend == "local" and \
+                f"def {irfn.name}({irfn.graph_param}, _dell" in body:
+            # delta-stepping program: the generated functions take the
+            # padded forward-ELL view the compact bucket relax gathers
+            # frontier out-rows from (None on hub-heavy graphs → dense
+            # fallback)
+            jitted = jax.jit(raw_fn) if jit else raw_fn
 
-        def fn(g, *, _jitted=jitted, **kw):
-            return _jitted(g, get_context(g).delta_ell(), **kw)
-    else:
-        fn = jax.jit(raw) if jit and backend == "local" else raw
+            def fn(g, *, _jitted=jitted, **kw):
+                return _jitted(g, get_context(g).delta_ell(), **kw)
+            return fn
+        return jax.jit(raw_fn) if jit and backend == "local" else raw_fn
+
+    fn = _wrap(raw)
+    refresh_fn = _wrap(raw_refresh) if raw_refresh is not None else None
     prog = CompiledProgram(
         name=irfn.name, backend=backend, source=src, fn=fn, raw_fn=raw,
         ir=irfn, schedule=sched,
         dist_meta=(extra_env or {}).get("__dist_meta__"),
-        dsl_source=source, jit=jit, diagnostics=diags)
+        dsl_source=source, jit=jit, diagnostics=diags,
+        refresh_fn=refresh_fn)
     if cache_key is not None:
         _COMPILE_CACHE[cache_key] = prog
         if fn_name is None:

@@ -161,16 +161,29 @@ class LocalCodegen:
         return any(self._delta_target(fp.body) is not None for fp in fps)
 
     # ------------------------------------------------------------------ entry
+    # when True, `generate()` emits the `<name>__refresh` incremental
+    # variant: same body, extra `_warm/_reset/_seed` params, and a
+    # warm-override block right before the first top-level iterative
+    # construct (see `_emit_warm_start`). Set on a FRESH codegen instance
+    # by the `generate_*` factories — never flipped mid-generation.
+    refresh_variant = False
+
+    def _sig_head(self, args):
+        # non-graph prop params may be passed as None (re-initialized inside);
+        # delta-stepping programs additionally take the padded ELL view the
+        # compact relax gathers frontier out-rows from (None = dense fallback)
+        return [args[0]] + (["_dell=None"] if self._wants_dell() else [])
+
     def generate(self) -> str:
         f, em = self.f, self.em
         g = f.graph_param
         args = [p.name for p in f.params]
-        # non-graph prop params may be passed as None (re-initialized inside);
-        # delta-stepping programs additionally take the padded ELL view the
-        # compact relax gathers frontier out-rows from (None = dense fallback)
-        head = [args[0]] + (["_dell=None"] if self._wants_dell() else [])
-        sig = ", ".join(head + [f"{a}=None" for a in args[1:]])
-        em.w(f"def {f.name}({sig}):")
+        name = f"{f.name}__refresh" if self.refresh_variant else f.name
+        tail = ["_warm=None", "_reset=None", "_seed=None"] \
+            if self.refresh_variant else []
+        sig = ", ".join(self._sig_head(args)
+                        + [f"{a}=None" for a in args[1:]] + tail)
+        em.w(f"def {name}({sig}):")
         with em.block():
             em.w(f"N = {g}.num_nodes")
             em.w("_vids = jnp.arange(N, dtype=jnp.int32)")
@@ -182,11 +195,40 @@ class LocalCodegen:
                         em.w(f"{p.name} = rt.init_prop(N, {self.jdt(p.dtype)!s})")
                 elif p.kind == "scalar":
                     self.dtypes[p.name] = p.dtype
+            warm_pending = self.refresh_variant
             for s in f.body:
+                if warm_pending and isinstance(
+                        s, (I.IFixedPoint, I.IDoWhile, I.IWhile)):
+                    self._emit_warm_start(s)
+                    warm_pending = False
                 self.stmt(s, HostCtx())
             rets = ", ".join(f"'{v}': {v}" for v in self.declared)
             em.w(f"return {{{rets}}}")
         return em.source()
+
+    def _emit_warm_start(self, s: I.IRStmt):
+        """Warm-override block of a `__refresh` variant.
+
+        Emitted AFTER the program's own init statements and immediately
+        before the first top-level iterative construct, so source-level
+        init writes (`src.dist = 0`) still stand for reset vertices:
+        every node property falls back to its previous converged value
+        except where `_reset` (the deletion cone) marks it stale, and for
+        a fixedPoint with a boolean convergence prop the `_seed` frontier
+        is OR-ed in so the first warm sweep relaxes exactly from the
+        update-incident vertices."""
+        em = self.em
+        em.w("if _warm is not None:")
+        with em.block():
+            for p in self.declared:
+                if p in self.f.node_props:
+                    em.w(f"{p} = rt.warm_start({p}, _warm.get('{p}'), _reset)")
+            if isinstance(s, I.IFixedPoint) and \
+                    self.f.node_props.get(s.conv_prop) == "bool":
+                em.w("if _seed is not None:")
+                with em.block():
+                    em.w(f"{s.conv_prop} = {s.conv_prop} "
+                         f"| jnp.asarray(_seed)")
 
     # ------------------------------------------------------------------ stmts
     def stmt(self, s: I.IRStmt, ctx):
@@ -935,11 +977,29 @@ def s_target_source(s: I.IAssignProp, ectx) -> str:
     return ectx.source
 
 
+def has_refresh_variant(irfn: I.IRFunction) -> bool:
+    """True when a `<name>__refresh` incremental variant is emitted next to
+    the program: the body has a TOP-LEVEL iterative construct to
+    warm-start. Programs whose loops live inside a set loop (BC's
+    per-source BFS) or that have no loop at all (TC) get no variant —
+    there is no converged per-node state a delta could reuse."""
+    return any(isinstance(s, (I.IFixedPoint, I.IDoWhile, I.IWhile))
+               for s in irfn.body)
+
+
 def generate_local(irfn: I.IRFunction, schedule: Optional[Schedule] = None,
                    batch_sources: Optional[int] = None) -> str:
     """Emit the local-backend source under `schedule` (default: the ENGINE
     shim's snapshot). Every knob is baked in as a literal — the same
     schedule yields byte-identical source. `batch_sources` is the legacy
-    per-program override (0/1 = sequential set loops)."""
-    return LocalCodegen(irfn, schedule=schedule,
-                        batch_sources=batch_sources).generate()
+    per-program override (0/1 = sequential set loops). Programs with a
+    top-level iterative construct additionally carry a `<name>__refresh`
+    incremental variant (fresh codegen instance — emitter/declared state
+    is per-function)."""
+    src = LocalCodegen(irfn, schedule=schedule,
+                       batch_sources=batch_sources).generate()
+    if has_refresh_variant(irfn):
+        cg = LocalCodegen(irfn, schedule=schedule, batch_sources=batch_sources)
+        cg.refresh_variant = True
+        src = src + "\n\n" + cg.generate()
+    return src

@@ -25,7 +25,7 @@ from __future__ import annotations
 
 from .. import ir as I
 from .base import HostCtx, VertexCtx
-from .local_jax import LocalCodegen
+from .local_jax import LocalCodegen, has_refresh_variant
 
 
 def _only_reads_side(expr, side: str) -> bool:
@@ -76,28 +76,10 @@ class PallasCodegen(LocalCodegen):
         """Literal kwargs for kops calls: engine knobs + kernel block caps."""
         return f"{self._engine_kwargs()}, block_rows={self._block_rows_literal()}"
 
-    def generate(self) -> str:
-        f, em = self.f, self.em
-        g = f.graph_param
-        args = [p.name for p in f.params]
-        sig = ", ".join([args[0], "_ell"] + [f"{a}=None" for a in args[1:]])
-        em.w(f"def {f.name}({sig}):")
-        with em.block():
-            em.w(f"N = {g}.num_nodes")
-            em.w("_vids = jnp.arange(N, dtype=jnp.int32)")
-            for p in f.params:
-                if p.kind == "prop_node":
-                    self.declare(p.name, p.dtype)
-                    em.w(f"if {p.name} is None:")
-                    with em.block():
-                        em.w(f"{p.name} = rt.init_prop(N, {self.jdt(p.dtype)!s})")
-                elif p.kind == "scalar":
-                    self.dtypes[p.name] = p.dtype
-            for s in f.body:
-                self.stmt(s, HostCtx())
-            rets = ", ".join(f"'{v}': {v}" for v in self.declared)
-            em.w(f"return {{{rets}}}")
-        return em.source()
+    def _sig_head(self, args):
+        # the bound sliced-ELL view is a required positional (the bind/api
+        # layer resolves it from the GraphContext per call)
+        return [args[0], "_ell"]
 
     # ---- hot pattern 1: frontier relax → sliced-ELL hybrid kernel ------------
     def emit_relax_hybrid(self, s: I.IMinMaxUpdate, frontier,
@@ -143,5 +125,10 @@ def generate_pallas(irfn: I.IRFunction, schedule=None, batch_sources=None,
                     **opts):
     cg = PallasCodegen(irfn, schedule=schedule, batch_sources=batch_sources)
     body = cg.generate()
+    if has_refresh_variant(irfn):
+        rcg = PallasCodegen(irfn, schedule=schedule,
+                            batch_sources=batch_sources)
+        rcg.refresh_variant = True
+        body = body + "\n\n" + rcg.generate()
     from ...kernels.ell_spmv import ops as kops
     return body, {"kops": kops}

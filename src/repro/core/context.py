@@ -213,11 +213,14 @@ PROBE_MAX_LEVELS = 64   # frontier probe cap: deep graphs saturate the signal
 
 
 def _graph_fingerprint(g: CSRGraph) -> str:
-    """sha256 over (N, E, indptr, indices, weights), truncated to 16 hex
-    chars. Content-addressed: independent of object identity and of every
-    derived view."""
+    """sha256 over (N, E, version, indptr, indices, weights), truncated to
+    16 hex chars. Content-addressed up to the update generation:
+    independent of object identity and of every derived view, but an
+    `update()` bumps `version` so even a content-identical successor (e.g.
+    delete-then-reinsert) keys fresh tuning records and bind-cache
+    entries instead of aliasing the pre-update graph's."""
     h = hashlib.sha256()
-    h.update(f"{g.num_nodes}:{g.num_edges}:".encode())
+    h.update(f"{g.num_nodes}:{g.num_edges}:{g.version}:".encode())
     for arr in (g.indptr, g.indices, g.weights):
         h.update(np.ascontiguousarray(np.asarray(arr)).tobytes())
     return h.hexdigest()[:16]
@@ -353,3 +356,31 @@ def prepare(g: CSRGraph, schedule: Optional[Schedule] = None, *,
             f"unknown backend {backend!r}; expected 'local', 'pallas', or "
             "'distributed'")
     return ctx
+
+
+def adopt_patched_views(delta) -> GraphContext:
+    """Carry the old graph's sliced-ELL views across a `g.update()`.
+
+    `apply_update` calls this eagerly with the `GraphDelta` it built: every
+    `("sliced_ell", reverse, layout)` view the OLD graph's context holds is
+    delta-patched (`repro.graph.dynamic.patch_sliced_ell` — in-place bucket
+    row rewrites, hub-tail absorption of degree-class migrations) and
+    installed into the NEW graph's context, so post-update queries skip the
+    O(N + E) view rebuild. Other derived views (dense/delta ELL, padded
+    graphs, distributed partitions) are left to rebuild lazily — they are
+    either whole-graph reshapes with no cheap patch or benchmark-only.
+
+    Returns the new graph's context (registered even when the old graph
+    never had one, so the fingerprint/bind machinery sees the new
+    `version` immediately)."""
+    from ..graph.dynamic import patch_sliced_ell
+    new_ctx = get_context(delta.graph)
+    if contains(delta.old):
+        old_ctx = get_context(delta.old)
+        for key in old_ctx.view_keys():
+            if key[0] != "sliced_ell" or key in new_ctx._views:
+                continue
+            _, rev, _layout = key
+            new_ctx._views[key] = patch_sliced_ell(
+                old_ctx._views[key], delta, reverse=rev)
+    return new_ctx

@@ -564,6 +564,24 @@ def init_prop(n, dtype, value=None):
     return jnp.full((n,), value, dt)
 
 
+def warm_start(init, warm, reset=None):
+    """Per-property warm start for an incremental refresh (`__refresh`
+    codegen variants call this right before the iterative construct).
+
+    `init` is the property AFTER the program's own init statements ran, so
+    source writes (e.g. `dist[src] = 0`) survive for reset vertices. With
+    no previous value the cold init stands; with one, `reset` marks the
+    vertices whose previous value may be stale (the deletion cone) and
+    falls back to the cold init there, keeping the still-exact warm values
+    everywhere else."""
+    if warm is None:
+        return init
+    warm = jnp.asarray(warm, init.dtype)
+    if reset is None:
+        return warm
+    return jnp.where(jnp.asarray(reset), init, warm)
+
+
 def init_prop_batch(b, n, dtype, value=None):
     """[B, N] per-source property block (batched set-loop chunk). `value`
     may be a scalar or an [N] vector (broadcast across the batch rows)."""

@@ -2,6 +2,8 @@ from ..schedule import Schedule
 from .csr import (CSRGraph, EllGraph, ENGINE, EngineConfig, SlicedEllGraph,
                   from_edges, resolve_schedule, to_dense, to_ell,
                   to_sliced_ell, pad_nodes, INF_I32)
+from .dynamic import (GraphDelta, RefreshPlan, apply_update, patch_sliced_ell,
+                      sliced_ell_edges)
 from .generators import (uniform_random, rmat, road, small_world,
                          powerlaw_social, preferential_attachment, load_suite,
                          SUITE)
@@ -10,7 +12,9 @@ from . import algorithms_ref, io, partition
 __all__ = [
     "CSRGraph", "EllGraph", "ENGINE", "EngineConfig", "Schedule",
     "SlicedEllGraph", "from_edges", "resolve_schedule", "to_dense", "to_ell",
-    "to_sliced_ell", "pad_nodes", "INF_I32", "uniform_random", "rmat",
-    "road", "small_world", "powerlaw_social", "preferential_attachment",
-    "load_suite", "SUITE", "algorithms_ref", "io", "partition",
+    "to_sliced_ell", "pad_nodes", "INF_I32", "GraphDelta", "RefreshPlan",
+    "apply_update", "patch_sliced_ell", "sliced_ell_edges", "uniform_random",
+    "rmat", "road", "small_world", "powerlaw_social",
+    "preferential_attachment", "load_suite", "SUITE", "algorithms_ref", "io",
+    "partition",
 ]

@@ -130,9 +130,26 @@ class CSRGraph:
     num_edges: int = dataclasses.field(metadata=dict(static=True))
     max_out_degree: int = dataclasses.field(default=1, metadata=dict(static=True))
     max_in_degree: int = dataclasses.field(default=1, metadata=dict(static=True))
+    # update generation: 0 for a freshly built graph, old.version + 1 for the
+    # result of `update()`. Folded into the context fingerprint so a
+    # post-update graph can never warm-reload a stale tuning record or
+    # alias a pre-update memoized bind.
+    version: int = dataclasses.field(default=0, metadata=dict(static=True))
 
     def num_nodes_(self) -> int:
         return self.num_nodes
+
+    def update(self, adds=None, dels=None, weights=None):
+        """Apply an edge write batch, returning a `repro.graph.dynamic.
+        GraphDelta` whose `.graph` is the NEW graph version (this graph is
+        immutable and untouched). `adds`/`dels` are (src, dst) pairs — a
+        `[K, 2]` array or a pair of arrays; `weights` parallels `adds`
+        (default 1; adding an existing edge replaces its weight). Deleting
+        an absent edge is a no-op. Derived sliced-ELL views of this
+        graph's `GraphContext` are delta-patched into the new graph's
+        context rather than rebuilt."""
+        from .dynamic import apply_update
+        return apply_update(self, adds=adds, dels=dels, weights=weights)
 
     # Paper library functions -------------------------------------------------
     def count_outNbrs(self) -> jax.Array:

@@ -1,0 +1,342 @@
+"""Dynamic graphs: edge write batches over immutable CSR snapshots.
+
+StarPlat's follow-up work extends the DSL from static snapshots to edge
+insert/delete batches with incremental recompute. `CSRGraph` stays an
+immutable pytree — `g.update(adds, dels)` builds the NEXT version of the
+graph host-side and returns a `GraphDelta` tying the two versions together
+with the *effective* edge changes (what actually appeared / disappeared,
+with weight replacements showing up as a remove + an add of the same
+endpoint pair).
+
+The delta is what makes incrementality possible downstream:
+
+* `repro.core.context.adopt_patched_views` uses the touched endpoints to
+  delta-patch the old graph's sliced-ELL views into the new graph's
+  `GraphContext` (in-place bucket row rewrites where the degree still fits
+  the bucket; the COO hub tail absorbs degree-class migrations) instead of
+  rebuilding them from scratch — `apply_update` does this eagerly;
+* `GraphDelta.plan()` derives the refresh seeding `BoundProgram.refresh`
+  warm-starts iterative programs with: inserted edges seed their source
+  endpoints, deletions reset the forward-reachable *cone* of the deleted
+  heads (every vertex whose converged value could have depended on a
+  removed edge — the last removed edge on any stale dependence path makes
+  its head an ancestor of the vertex) and seed the cone plus its in-edge
+  boundary, whose values are still exact.
+
+The number of nodes never changes across an update; only edges do.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+from .csr import CSRGraph, INF_I32, SlicedEllGraph, from_edges
+
+
+def _normalize_pairs(pairs, n: int, what: str):
+    """(src, dst) int64 arrays from a [K, 2] array / pair of arrays / list
+    of (u, v) tuples; validates the vertex range."""
+    if pairs is None:
+        z = np.zeros(0, np.int64)
+        return z, z
+    if isinstance(pairs, tuple) and len(pairs) == 2 and \
+            not np.isscalar(pairs[0]):
+        src = np.asarray(pairs[0], np.int64).reshape(-1)
+        dst = np.asarray(pairs[1], np.int64).reshape(-1)
+        if src.shape != dst.shape:
+            raise ValueError(
+                f"{what}: src/dst arrays differ in length "
+                f"({src.shape[0]} vs {dst.shape[0]})")
+    else:
+        arr = np.asarray(pairs, np.int64)
+        if arr.size == 0:
+            z = np.zeros(0, np.int64)
+            return z, z
+        arr = arr.reshape(-1, 2)
+        src, dst = arr[:, 0], arr[:, 1]
+    if src.size and (src.min() < 0 or src.max() >= n or
+                     dst.min() < 0 or dst.max() >= n):
+        raise ValueError(
+            f"{what}: endpoints must be vertex ids in [0, {n}), got range "
+            f"[{min(src.min(), dst.min())}, {max(src.max(), dst.max())}]")
+    return src, dst
+
+
+def _missing_from(keys_a, w_a, keys_b, w_b):
+    """Mask over a's edges that are NOT present in b with the same weight
+    (both key arrays sorted — CSR order is (src, dst)-lexicographic)."""
+    out = np.ones(keys_a.shape[0], bool)
+    if keys_b.shape[0] == 0:
+        return out
+    idx = np.searchsorted(keys_b, keys_a)
+    valid = idx < keys_b.shape[0]
+    iv = idx[valid]
+    out[valid] = ~((keys_b[iv] == keys_a[valid]) & (w_b[iv] == w_a[valid]))
+    return out
+
+
+@dataclasses.dataclass(frozen=True)
+class RefreshPlan:
+    """Host-side seeding of one incremental refresh (see module docstring).
+
+    ``reset`` marks the deletion cone: vertices whose previous converged
+    value may be stale (too small, for a monotone Min fixed point) and must
+    restart from the cold init. ``seed`` ⊇ ``reset`` adds the cone's
+    in-edge boundary and the source endpoints of inserted edges — the
+    vertices the first warm sweep relaxes from. ``affected_frac`` is
+    ``|seed| / N``, the quantity `Schedule.refresh_threshold_frac` gates."""
+
+    reset: np.ndarray        # bool[N]
+    seed: np.ndarray         # bool[N]
+    affected_frac: float
+    cone_size: int
+
+
+@dataclasses.dataclass(eq=False)
+class GraphDelta:
+    """One applied update batch: ``old`` → ``graph`` (= ``old.version + 1``).
+
+    The add/del arrays hold the EFFECTIVE changes (CSR-order sorted):
+    adding an already-present edge with its existing weight is dropped;
+    replacing a weight appears as a removal of the old (src, dst, w) plus
+    an addition of the new one; deleting an absent edge is a no-op."""
+
+    old: CSRGraph
+    graph: CSRGraph
+    add_src: np.ndarray
+    add_dst: np.ndarray
+    add_wts: np.ndarray
+    del_src: np.ndarray
+    del_dst: np.ndarray
+    del_wts: np.ndarray
+    _plan: Optional[RefreshPlan] = dataclasses.field(
+        default=None, repr=False, compare=False)
+
+    @property
+    def num_added(self) -> int:
+        return int(self.add_src.shape[0])
+
+    @property
+    def num_removed(self) -> int:
+        return int(self.del_src.shape[0])
+
+    def touched_rows(self, *, reverse: bool) -> np.ndarray:
+        """Rows whose adjacency changed in the given orientation: dst
+        endpoints for the reverse (in-edge) view, src for the forward."""
+        if reverse:
+            return np.unique(np.concatenate([self.add_dst, self.del_dst]))
+        return np.unique(np.concatenate([self.add_src, self.del_src]))
+
+    def plan(self) -> RefreshPlan:
+        """The refresh seeding for this delta (memoized)."""
+        if self._plan is None:
+            object.__setattr__(self, "_plan", _refresh_plan(self))
+        return self._plan
+
+
+def apply_update(g: CSRGraph, adds=None, dels=None, weights=None) -> GraphDelta:
+    """`CSRGraph.update` implementation (host-side numpy).
+
+    Deletions apply first, then additions (so delete-then-reinsert within
+    one batch keeps the edge, and an add of an existing pair replaces its
+    weight). The old graph's derived sliced-ELL views are eagerly
+    delta-patched into the new graph's `GraphContext`."""
+    n = g.num_nodes
+    src = np.asarray(g.edge_src, np.int64)
+    dst = np.asarray(g.indices, np.int64)
+    w = np.asarray(g.weights, np.int64)
+    key = src * n + dst          # sorted: CSR order is (src, dst)-lex
+
+    a_src, a_dst = _normalize_pairs(adds, n, "adds")
+    d_src, d_dst = _normalize_pairs(dels, n, "dels")
+    if weights is None:
+        a_w = np.ones_like(a_src)
+    else:
+        a_w = np.asarray(weights, np.int64).reshape(-1)
+        if a_w.shape != a_src.shape:
+            raise ValueError(
+                f"weights must parallel adds ({a_src.shape[0]} edges), got "
+                f"{a_w.shape[0]} values")
+    if a_src.size:   # within-batch dedup: the LAST write to a pair wins
+        a_key = a_src * n + a_dst
+        _, first_rev = np.unique(a_key[::-1], return_index=True)
+        sel = a_src.shape[0] - 1 - first_rev
+        a_src, a_dst, a_w = a_src[sel], a_dst[sel], a_w[sel]
+
+    drop = np.concatenate([d_src * n + d_dst, a_src * n + a_dst])
+    keep = ~np.isin(key, drop) if drop.size else np.ones(key.shape[0], bool)
+    new_src = np.concatenate([src[keep], a_src])
+    new_dst = np.concatenate([dst[keep], a_dst])
+    new_w = np.concatenate([w[keep], a_w])
+    new_g = from_edges(n, new_src, new_dst, new_w)
+    new_g = dataclasses.replace(new_g, version=g.version + 1)
+
+    # effective changes: compare the (key, weight) sets of the two versions
+    nk = np.asarray(new_g.edge_src, np.int64) * n \
+        + np.asarray(new_g.indices, np.int64)
+    nw = np.asarray(new_g.weights, np.int64)
+    removed = _missing_from(key, w, nk, nw)
+    added = _missing_from(nk, nw, key, w)
+    delta = GraphDelta(
+        old=g, graph=new_g,
+        add_src=(nk[added] // n).astype(np.int32),
+        add_dst=(nk[added] % n).astype(np.int32),
+        add_wts=nw[added].astype(np.int32),
+        del_src=(key[removed] // n).astype(np.int32),
+        del_dst=(key[removed] % n).astype(np.int32),
+        del_wts=w[removed].astype(np.int32),
+    )
+    from ..core.context import adopt_patched_views
+    adopt_patched_views(delta)
+    return delta
+
+
+def _refresh_plan(delta: GraphDelta) -> RefreshPlan:
+    g = delta.graph
+    n = g.num_nodes
+    indices = np.asarray(g.indices)
+    edge_src = np.asarray(g.edge_src)
+    reset = np.zeros(n, bool)
+    roots = np.unique(delta.del_dst)
+    if roots.size:
+        # forward closure from the deleted heads over the NEW graph,
+        # edge-parallel level sweeps (same shape as the stats BFS probe)
+        reset[roots] = True
+        front = reset.copy()
+        while edge_src.size:
+            hit = np.zeros(n, bool)
+            hit[indices[front[edge_src]]] = True
+            newly = hit & ~reset
+            if not newly.any():
+                break
+            reset |= newly
+            front = newly
+    seed = reset.copy()
+    if delta.add_src.size:
+        seed[np.unique(delta.add_src)] = True
+    if roots.size and edge_src.size:
+        # the cone's in-edge boundary: still-exact values that re-supply it
+        boundary = np.unique(edge_src[reset[indices]])
+        seed[boundary] = True
+    frac = float(seed.sum() / n) if n else 0.0
+    return RefreshPlan(reset=reset, seed=seed, affected_frac=frac,
+                       cone_size=int(reset.sum()))
+
+
+def patch_sliced_ell(view: SlicedEllGraph, delta: GraphDelta, *,
+                     reverse: bool) -> SlicedEllGraph:
+    """Delta-patch one sliced-ELL view of ``delta.old`` into a view of
+    ``delta.graph`` without a full rebuild.
+
+    A touched row whose new degree still fits its bucket's width is
+    rewritten in place (its slot may carry more padding than the bucket's
+    degree class implies — the kernels never care, padding is semiring
+    identity). Any degree-class migration — bucket overflow, an emptied
+    row, an ex-hub row shrinking, a formerly degree-0 row appearing —
+    evacuates the old slot (sentinel row) and appends the row's full new
+    adjacency to the COO hub tail, which handles arbitrary degrees.
+    Bucket shapes and ``widths`` are preserved, so the patched view stays
+    layout-compatible with the schedule that built it."""
+    g = delta.graph
+    n = g.num_nodes
+    indptr = np.asarray(g.rev_indptr if reverse else g.indptr)
+    indices = np.asarray(g.rev_indices if reverse else g.indices)
+    wts = np.asarray(g.rev_weights if reverse else g.weights)
+    touched = delta.touched_rows(reverse=reverse)
+    if touched.size == 0:
+        return view      # empty delta: the old view is already exact
+
+    rows_np = [np.asarray(r) for r in view.rows]
+    loc = {}             # row id -> (bucket, slot)
+    for b, rr in enumerate(rows_np):
+        for slot, r in enumerate(rr.tolist()):
+            if r != n:
+                loc[r] = (b, slot)
+    hub_rows = np.asarray(view.hub_rows)
+    hub_cols = np.asarray(view.hub_cols)
+    hub_wts = np.asarray(view.hub_wts)
+    hub_members = set(np.unique(hub_rows).tolist())
+
+    copied = {}          # bucket -> mutable (cols, wts, rows) numpy copies
+
+    def bucket_arrays(b):
+        if b not in copied:
+            copied[b] = (np.asarray(view.cols[b]).copy(),
+                         np.asarray(view.wts[b]).copy(),
+                         rows_np[b].copy())
+        return copied[b]
+
+    hub_evict, hub_add = [], []
+    for r in touched.tolist():
+        s, e = int(indptr[r]), int(indptr[r + 1])
+        d = e - s
+        spot = loc.get(r)
+        if spot is not None:
+            b, slot = spot
+            cols_b, wts_b, rows_b = bucket_arrays(b)
+            if 0 < d <= cols_b.shape[1]:
+                cols_b[slot, :] = n
+                wts_b[slot, :] = int(INF_I32)
+                cols_b[slot, :d] = indices[s:e]
+                wts_b[slot, :d] = wts[s:e]
+                continue
+            # degree left the bucket: the slot becomes a padding row and
+            # the hub tail absorbs the migration
+            cols_b[slot, :] = n
+            wts_b[slot, :] = int(INF_I32)
+            rows_b[slot] = n
+        elif r in hub_members:
+            hub_evict.append(r)
+        if d > 0:
+            hub_add.append((r, indices[s:e], wts[s:e]))
+
+    patched_cols = list(view.cols)
+    patched_wts = list(view.wts)
+    patched_rows = list(view.rows)
+    for b, (cb, wb, rb) in copied.items():
+        patched_cols[b] = jnp.asarray(cb)
+        patched_wts[b] = jnp.asarray(wb)
+        patched_rows[b] = jnp.asarray(rb)
+    if hub_evict or hub_add:
+        if hub_evict:
+            keepers = ~np.isin(hub_rows, np.asarray(hub_evict, np.int32))
+        else:
+            keepers = np.ones(hub_rows.shape[0], bool)
+        hr, hc, hw = [hub_rows[keepers]], [hub_cols[keepers]], [hub_wts[keepers]]
+        for r, cs, ws in hub_add:
+            hr.append(np.full(cs.shape[0], r, np.int32))
+            hc.append(cs.astype(np.int32))
+            hw.append(ws.astype(np.int32))
+        hub_rows = np.concatenate(hr)
+        hub_cols = np.concatenate(hc)
+        hub_wts = np.concatenate(hw)
+    return SlicedEllGraph(
+        cols=tuple(patched_cols), wts=tuple(patched_wts),
+        rows=tuple(patched_rows),
+        hub_rows=jnp.asarray(hub_rows), hub_cols=jnp.asarray(hub_cols),
+        hub_wts=jnp.asarray(hub_wts),
+        num_nodes=n, widths=view.widths)
+
+
+def sliced_ell_edges(view: SlicedEllGraph):
+    """The (row, col, weight) multiset a sliced-ELL view encodes (host-side;
+    tests compare a patched view against a rebuilt one through this)."""
+    n = view.num_nodes
+    out = []
+    for cols, wts, rows in zip(view.cols, view.wts, view.rows):
+        cols, wts, rows = np.asarray(cols), np.asarray(wts), np.asarray(rows)
+        for slot in range(rows.shape[0]):
+            r = int(rows[slot])
+            if r == n:
+                continue
+            real = cols[slot] < n
+            out.extend(zip([r] * int(real.sum()),
+                           cols[slot][real].tolist(),
+                           wts[slot][real].tolist()))
+    out.extend(zip(np.asarray(view.hub_rows).tolist(),
+                   np.asarray(view.hub_cols).tolist(),
+                   np.asarray(view.hub_wts).tolist()))
+    return sorted(out)

@@ -111,6 +111,16 @@ class Schedule:
         wasted relaxation work per sweep, more bucket phases); large Δ
         approaches the monotonic relax. ``autotune()`` derives candidates
         from the graph's weight scale.
+    refresh_threshold_frac:
+        Incremental-recompute cutoff for ``BoundProgram.refresh`` (a
+        fraction of N, in [0, 1]). After ``g.update(adds, dels)`` the
+        refresh path seeds the iterative loop from the vertices affected
+        by the batch; when the affected set exceeds this fraction of the
+        graph, warm-starting saves too little over a cold sweep and
+        refresh falls back to a dense full recompute. ``0.0`` always
+        recomputes from scratch; ``1.0`` always takes the incremental
+        path. Programs without an iterative construct have nothing to
+        warm-start (SP208).
     """
 
     num_buckets: int = 4
@@ -124,6 +134,7 @@ class Schedule:
     dist_gather_frac: float = 0.25
     priority: str = "none"
     delta_bucket: int = 64
+    refresh_threshold_frac: float = 0.25
 
     def __post_init__(self):
         set_ = lambda k, v: object.__setattr__(self, k, v)  # noqa: E731 (frozen)
@@ -200,6 +211,14 @@ class Schedule:
             raise ValueError(
                 "Schedule.dist_gather_frac must be a fraction of the shard "
                 f"block in [0, 1], got {self.dist_gather_frac!r}")
+        rfrac = self.refresh_threshold_frac
+        if isinstance(rfrac, numbers.Real) and not isinstance(rfrac, bool):
+            set_("refresh_threshold_frac", float(rfrac))
+        if not isinstance(self.refresh_threshold_frac, float) or \
+                not 0.0 <= self.refresh_threshold_frac <= 1.0:
+            raise ValueError(
+                "Schedule.refresh_threshold_frac must be a fraction of N in "
+                f"[0, 1], got {self.refresh_threshold_frac!r}")
         br = self.block_rows
         if isinstance(br, (list, tuple)):
             br = tuple(br)

@@ -415,6 +415,64 @@ class GraphService:
         handle.tuned.append(kind.name)
         return sched
 
+    # ---- write batches ---------------------------------------------------
+    async def update_graph(self, name: str, *, adds=None, dels=None,
+                           weights=None):
+        """Apply an edge write batch to a registered graph; returns the
+        `GraphDelta` once applied.
+
+        The swap is atomic with respect to sweeps: if the graph is pinned
+        by an in-flight sweep the mutation defers until the last pin drops
+        (`GraphPool.defer`), so a sweep always runs against one consistent
+        version. Applying swaps the pool entry and handle to the new graph
+        version (its sliced-ELL views delta-patched by `update()` itself),
+        re-binds the handle's compiled programs, and rebuilds the kind
+        runners — queued queries dispatched after the swap see the new
+        version. Runs host-side on the event-loop thread: updates are
+        assumed rare relative to queries (a write batch is an O(E) CSR
+        rebuild, roughly one sweep's worth of work)."""
+        if self._closed:
+            raise ServiceClosed("service is closed")
+        handle = self._graphs.get(name)
+        if handle is None:
+            raise UnknownGraph(
+                f"no graph named {name!r} (registered: "
+                f"{self._pool.names() or '<none>'})")
+        loop = asyncio.get_running_loop()
+        fut = loop.create_future()
+
+        def apply(entry):
+            try:
+                delta = handle.graph.update(adds=adds, dels=dels,
+                                            weights=weights)
+                self._install_update(handle, entry, delta)
+            except Exception as exc:
+                if not fut.done():
+                    fut.set_exception(exc)
+                return
+            if not fut.done():
+                fut.set_result(delta)
+
+        self._pool.defer(name, apply)
+        return await fut
+
+    def _install_update(self, handle, entry, delta) -> None:
+        """Swap handle + pool entry to `delta.graph` and rebuild everything
+        that closed over the old version (bound programs, kind runners)."""
+        from ..core.context import get_context
+        new_g = delta.graph
+        ctx = get_context(new_g)       # registered (and patched) by update()
+        entry.graph, entry.ctx = new_g, ctx
+        handle.graph, handle.ctx = new_g, ctx
+        for pname, prog in handle.programs.items():
+            prepare(new_g, program=prog)
+            handle.bounds[pname] = prog.bind(new_g)
+        for (gname, kname), lane in self._lanes.items():
+            if gname == handle.name:
+                lane.runner = lane.kind.make_runner(
+                    handle, handle.schedules[kname], lane.width)
+        self._stats["updates"] += 1
+
     def unregister_graph(self, name: str) -> None:
         for key in [k for k in self._lanes if k[0] == name]:
             lane = self._lanes.pop(key)
@@ -588,6 +646,7 @@ class GraphService:
             "max_batch": self._stats["max_batch"],
             "rejected": self._stats["rejected"],
             "timeouts": self._stats["timeouts"],
+            "updates": self._stats["updates"],
             "pending": self._pending,
             "view_bytes": self._pool.view_nbytes(),
             "evictions": list(self._pool.evictions),

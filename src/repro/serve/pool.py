@@ -28,7 +28,7 @@ from ..core.context import GraphContext, get_context
 
 
 class _Entry:
-    __slots__ = ("name", "graph", "ctx", "seq", "pins")
+    __slots__ = ("name", "graph", "ctx", "seq", "pins", "deferred")
 
     def __init__(self, name: str, graph, ctx: GraphContext, seq: int):
         self.name = name
@@ -36,6 +36,7 @@ class _Entry:
         self.ctx = ctx
         self.seq = seq         # LRU clock: larger = more recently used
         self.pins = 0          # >0 while a sweep over this graph runs
+        self.deferred = []     # mutations queued while pinned (see defer())
 
 
 class GraphPool:
@@ -87,13 +88,32 @@ class GraphPool:
     @contextlib.contextmanager
     def pin(self, name: str):
         """Hold the graph un-evictable for the duration of a sweep. Pins
-        nest (two lanes of the same graph may sweep concurrently)."""
+        nest (two lanes of the same graph may sweep concurrently). When the
+        last pin drops, mutations deferred while pinned run (in order) —
+        this is how a write batch waits out in-flight sweeps."""
         entry = self.get(name)
         entry.pins += 1
         try:
             yield entry
         finally:
             entry.pins -= 1
+            if entry.pins == 0 and entry.deferred:
+                pending, entry.deferred = entry.deferred, []
+                for fn in pending:
+                    fn(entry)
+
+    def defer(self, name: str, fn) -> bool:
+        """Run `fn(entry)` now if the graph is unpinned, else queue it to
+        run when the last pin drops. Pin/unpin and defer all happen on the
+        service's event-loop thread, so no locking is needed; a sweep that
+        pins after the mutation ran sees the new state, one already pinned
+        finishes against the old. Returns True when `fn` ran immediately."""
+        entry = self.get(name, touch=False)
+        if entry.pins == 0:
+            fn(entry)
+            return True
+        entry.deferred.append(fn)
+        return False
 
     # ---- memory accounting + eviction ------------------------------------
     def view_nbytes(self) -> int:

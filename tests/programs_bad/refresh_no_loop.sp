@@ -1,0 +1,12 @@
+// SP208 (under --schedule refresh_threshold_frac=0.5): one-shot degree
+// counts converge in a single pass — there is no iterative construct for
+// `BoundProgram.refresh` to warm-start, so the incremental-recompute
+// cutoff can never bind and refresh raises on this program.
+function Bad_Refresh(Graph g, propNode<int> deg) {
+    g.attachNodeProperty(deg = 0);
+    forall(v in g.nodes()) {
+        forall(nbr in g.neighbors(v)) {
+            v.deg += 1;
+        }
+    }
+}

@@ -55,6 +55,8 @@ def test_bad_corpus_program_diagnostics(name, code, severity):
     ("delta_unweighted", Schedule(priority="delta"), "local", "SP202"),
     ("frontier_no_loop", Schedule(dist_frontier="compact"), "distributed",
      "SP203"),
+    ("refresh_no_loop", Schedule(refresh_threshold_frac=0.5), "local",
+     "SP208"),
 ])
 def test_bad_corpus_schedule_diagnostics(name, sched, backend, code):
     fx = _only_fx(_bad(name))
@@ -120,6 +122,7 @@ def test_delta_on_unweighted_cc_warns_but_compiles():
     (dict(dist_frontier="compact", dist_gather_frac=0.75), "distributed",
      "SP206"),
     (dict(batch_sources=4), "local", "SP204"),
+    (dict(refresh_threshold_frac=0.5), "local", "SP208"),
 ])
 def test_schedule_warnings_on_tc(kwargs, backend, code):
     fx = _only_fx(load_program_source("tc"))

@@ -1,0 +1,321 @@
+"""Dynamic graphs: `g.update()` write batches, delta-patched sliced-ELL
+views, version-aware fingerprints, and incremental `refresh` agreement
+with from-scratch recompute across programs × backends × graph families.
+"""
+import numpy as np
+import pytest
+
+from repro.autotune import RECORD_VERSION, TuningRecord, TuningStore, \
+    source_digest
+from repro.core import Schedule, compile_bundled, load_program_source
+from repro.core.api import BoundProgram
+from repro.core.context import get_context
+from repro.graph import (from_edges, patch_sliced_ell, powerlaw_social, road,
+                         sliced_ell_edges, to_sliced_ell)
+
+PARAMS = {
+    "sssp": dict(src=0),
+    "sssp_pull": dict(src=0),
+    "cc": dict(),
+    "pr": dict(beta=1e-5, delta=0.85, maxIter=100),
+}
+VALUE_KEY = {"sssp": "dist", "sssp_pull": "dist", "cc": "comp",
+             "pr": "pageRank"}
+
+GRAPHS = {
+    "powerlaw": lambda: powerlaw_social(150, avg_degree=8, seed=7),
+    "grid": lambda: road(9, seed=7),
+}
+
+
+def random_batch(rng, g, k_add=5, k_del=4):
+    n = g.num_nodes
+    adds = np.stack([rng.integers(0, n, k_add),
+                     rng.integers(0, n, k_add)], 1)
+    weights = rng.integers(1, 10, k_add)
+    idx = rng.choice(g.num_edges, min(k_del, g.num_edges), replace=False)
+    dels = np.stack([np.asarray(g.edge_src)[idx],
+                     np.asarray(g.indices)[idx]], 1)
+    return adds, dels, weights
+
+
+def assert_same(name, ref, out):
+    key = VALUE_KEY[name]
+    a, b = np.asarray(ref[key]), np.asarray(out[key])
+    if name == "pr":
+        # both runs stop at diff <= beta, so warm/cold agree to tolerance
+        np.testing.assert_allclose(a, b, atol=1e-3)
+    else:
+        np.testing.assert_array_equal(a, b)
+
+
+# --- the agreement matrix ---------------------------------------------------
+
+@pytest.mark.parametrize("backend", ["local", "pallas"])
+@pytest.mark.parametrize("gname", sorted(GRAPHS))
+@pytest.mark.parametrize("name", sorted(PARAMS))
+def test_refresh_matches_scratch(name, gname, backend):
+    """K chained random batches: refresh (forced incremental) == from
+    scratch on every version, with the refreshed result feeding the next
+    refresh."""
+    rng = np.random.default_rng(11)
+    g = GRAPHS[gname]()
+    prog = compile_bundled(name, backend=backend,
+                           schedule=Schedule(refresh_threshold_frac=1.0))
+    prev = prog.bind(g)(**PARAMS[name])
+    for _ in range(3):
+        adds, dels, w = random_batch(rng, g)
+        delta = g.update(adds, dels, weights=w)
+        bound = prog.bind(delta.graph)
+        scratch = bound(**PARAMS[name])
+        refreshed = bound.refresh(prev, delta, **PARAMS[name])
+        assert_same(name, scratch, refreshed)
+        g, prev = delta.graph, refreshed
+
+
+def test_threshold_zero_falls_back_dense():
+    """refresh_threshold_frac=0.0 pins the from-scratch path — answers
+    still agree (it IS the plain call)."""
+    rng = np.random.default_rng(5)
+    g = GRAPHS["powerlaw"]()
+    prog = compile_bundled("sssp",
+                          schedule=Schedule(refresh_threshold_frac=0.0))
+    prev = prog.bind(g)(src=0)
+    adds, dels, w = random_batch(rng, g)
+    delta = g.update(adds, dels, weights=w)
+    bound = prog.bind(delta.graph)
+    assert delta.plan().affected_frac > 0.0
+    assert_same("sssp", bound(src=0), bound.refresh(prev, delta, src=0))
+
+
+def test_refresh_without_loop_raises():
+    g = GRAPHS["grid"]()
+    bound = compile_bundled("tc").bind(g)
+    assert bound.program.refresh_fn is None
+    with pytest.raises(ValueError, match="no incremental refresh"):
+        bound.refresh({}, None)
+
+
+def test_refresh_requires_post_update_bind():
+    rng = np.random.default_rng(6)
+    g = GRAPHS["grid"]()
+    prog = compile_bundled("sssp")
+    prev = prog.bind(g)(src=0)
+    adds, dels, w = random_batch(rng, g)
+    delta = g.update(adds, dels, weights=w)
+    with pytest.raises(ValueError, match="post-update graph"):
+        prog.bind(g).refresh(prev, delta, src=0)
+
+
+# --- update semantics + edge cases ------------------------------------------
+
+def test_update_is_immutable_and_versioned():
+    g = GRAPHS["grid"]()
+    before = np.asarray(g.indices).copy()
+    delta = g.update(adds=[(0, 5)], dels=[(0, 1)])
+    assert g.version == 0 and delta.graph.version == 1
+    assert np.array_equal(np.asarray(g.indices), before)
+    assert delta.old is g
+
+
+def test_weight_replace_and_batch_dedup():
+    g = from_edges(4, [0, 1], [1, 2], [3, 3])
+    # add an existing pair: weight replaced; last write in the batch wins
+    delta = g.update(adds=[(0, 1), (0, 1)], weights=[7, 9])
+    assert delta.num_added == 1 and delta.num_removed == 1
+    assert (int(delta.add_wts[0]), int(delta.del_wts[0])) == (9, 3)
+    assert delta.graph.num_edges == 2
+
+
+def test_delete_absent_edge_is_noop():
+    g = from_edges(4, [0, 1], [1, 2], [3, 3])
+    delta = g.update(dels=[(2, 3)])
+    assert delta.num_added == 0 and delta.num_removed == 0
+    assert delta.graph.num_edges == 2
+    assert delta.plan().affected_frac == 0.0
+
+
+def test_delete_then_reinsert_same_content_fresh_fingerprint():
+    """A content-identical successor version must NOT alias the old
+    graph's fingerprint, bind-cache entry, or tuning records."""
+    g = GRAPHS["grid"]()
+    e = (int(np.asarray(g.edge_src)[0]), int(np.asarray(g.indices)[0]))
+    w = int(np.asarray(g.weights)[0])
+    d1 = g.update(dels=[e])
+    d2 = d1.graph.update(adds=[e], weights=[w])
+    g2 = d2.graph
+    for arr in ("indptr", "indices", "weights"):
+        np.testing.assert_array_equal(np.asarray(getattr(g, arr)),
+                                      np.asarray(getattr(g2, arr)))
+    fps = {get_context(x).fingerprint() for x in (g, d1.graph, g2)}
+    assert len(fps) == 3, "every version fingerprints distinctly"
+
+    prog = compile_bundled("sssp")
+    b_old, b_new = prog.bind(g), prog.bind(g2)
+    assert b_old is not b_new
+    assert prog.bind(g) is b_old, "old bind stays cached"
+    assert prog.bind(g2) is b_new
+
+    # a record tuned against the old version is a miss for the new one
+    store = TuningStore()
+    digest = source_digest(load_program_source("sssp"))
+    store.put(TuningRecord(
+        source_digest=digest, backend="local",
+        graph_fingerprint=get_context(g).fingerprint(),
+        fn_name="Compute_SSSP", schedule={}, best_ms=1.0, default_ms=1.0,
+        trials=[], budget=1, seed=0, version=RECORD_VERSION))
+    assert store.lookup(digest, "local",
+                        get_context(g).fingerprint()) is not None
+    assert store.lookup(digest, "local",
+                        get_context(g2).fingerprint()) is None
+
+
+def test_batch_emptying_a_vertex():
+    """Deleting every out-edge of a vertex evacuates its forward-view row
+    (degree 0 rows live nowhere) and refresh still agrees."""
+    g = GRAPHS["powerlaw"]()
+    sched = Schedule(refresh_threshold_frac=1.0)
+    ctx = get_context(g)
+    ctx.sliced_ell(sched, reverse=False)
+    ctx.sliced_ell(sched, reverse=True)
+    out_deg = np.diff(np.asarray(g.indptr))
+    v = int(np.argmax((out_deg > 0) & (out_deg <= 4)))
+    s, e = int(g.indptr[v]), int(g.indptr[v + 1])
+    dels = np.stack([np.full(e - s, v), np.asarray(g.indices)[s:e]], 1)
+
+    prog = compile_bundled("sssp", schedule=sched)
+    prev = prog.bind(g)(src=0)
+    delta = g.update(dels=dels)
+    g2 = delta.graph
+    assert int(g2.indptr[v + 1] - g2.indptr[v]) == 0
+    for rev in (False, True):
+        patched = get_context(g2).sliced_ell(sched, reverse=rev)
+        fresh = to_sliced_ell(g2, reverse=rev, schedule=sched)
+        assert sliced_ell_edges(patched) == sliced_ell_edges(fresh)
+    bound = prog.bind(g2)
+    assert_same("sssp", bound(src=0), bound.refresh(prev, delta, src=0))
+
+
+def test_hub_tail_absorbs_migrations():
+    """Under a single narrow bucket most hub-adjacent rows live in the COO
+    tail; updates touching the hub and rows that overflow their bucket
+    must keep the patched view semantically exact, and the pallas program
+    must compute the same answers through it."""
+    g = GRAPHS["powerlaw"]()
+    n = g.num_nodes
+    sched = Schedule(num_buckets=1, min_width=8, refresh_threshold_frac=1.0)
+    ctx = get_context(g)
+    view = ctx.sliced_ell(sched, reverse=True)
+    assert np.asarray(view.hub_rows).size > 0, "need a populated hub tail"
+    hub = int(np.asarray(view.hub_rows)[0])
+    # touch the hub row AND push a bucket row past the 8-wide bucket
+    in_deg = np.zeros(n, np.int64)
+    np.add.at(in_deg, np.asarray(g.indices), 1)
+    small = int(np.argmax((in_deg > 0) & (in_deg <= 8)))
+    rng = np.random.default_rng(2)
+    adds = [(int(s), small) for s in rng.choice(n, 10, replace=False)] \
+        + [(int(rng.integers(0, n)), hub)]
+    idx = np.flatnonzero(np.asarray(g.indices) == hub)[:2]
+    dels = np.stack([np.asarray(g.edge_src)[idx],
+                     np.asarray(g.indices)[idx]], 1)
+
+    prog = compile_bundled("sssp", backend="pallas", schedule=sched)
+    prev = prog.bind(g)(src=0)
+    delta = g.update(adds, dels, weights=np.arange(1, len(adds) + 1))
+    g2 = delta.graph
+    patched = get_context(g2).sliced_ell(sched, reverse=True)
+    fresh = to_sliced_ell(g2, reverse=True, schedule=sched)
+    assert sliced_ell_edges(patched) == sliced_ell_edges(fresh)
+    # the migrated row moved to the hub tail, keeping bucket shapes intact
+    assert np.asarray(patched.hub_rows).size > np.asarray(view.hub_rows).size
+    assert [c.shape for c in patched.cols] == [c.shape for c in view.cols]
+    bound = prog.bind(g2)
+    assert_same("sssp", bound(src=0), bound.refresh(prev, delta, src=0))
+
+
+@pytest.mark.parametrize("rev", [False, True])
+def test_patched_view_matches_rebuilt(rev):
+    rng = np.random.default_rng(13)
+    g = GRAPHS["powerlaw"]()
+    sched = Schedule(num_buckets=3)
+    view = get_context(g).sliced_ell(sched, reverse=rev)
+    adds, dels, w = random_batch(rng, g, k_add=12, k_del=10)
+    delta = g.update(adds, dels, weights=w)
+    patched = patch_sliced_ell(view, delta, reverse=rev)
+    fresh = to_sliced_ell(delta.graph, reverse=rev, schedule=sched)
+    assert sliced_ell_edges(patched) == sliced_ell_edges(fresh)
+
+
+def test_empty_delta_reuses_view():
+    g = GRAPHS["grid"]()
+    sched = Schedule()
+    view = get_context(g).sliced_ell(sched, reverse=True)
+    delta = g.update()      # no-op batch
+    assert patch_sliced_ell(view, delta, reverse=True) is view
+
+
+# --- refresh plan semantics -------------------------------------------------
+
+def test_plan_insert_only_seeds_sources():
+    g = GRAPHS["grid"]()
+    # long-range pairs: genuinely NEW edges (re-adding an existing edge
+    # with a different weight is a replacement, which resets a cone)
+    delta = g.update(adds=[(3, 40), (10, 60)])
+    assert delta.num_removed == 0
+    plan = delta.plan()
+    assert plan.cone_size == 0, "no deletions -> nothing resets"
+    assert set(np.flatnonzero(plan.seed)) == {3, 10}
+
+
+def test_plan_delete_cone_is_forward_closure():
+    # path 0 -> 1 -> 2 -> 3; deleting (0,1) must reset {1,2,3}
+    g = from_edges(5, [0, 1, 2], [1, 2, 3], [1, 1, 1])
+    plan = g.update(dels=[(0, 1)]).plan()
+    assert set(np.flatnonzero(plan.reset)) == {1, 2, 3}
+    assert plan.cone_size == 3
+
+
+def test_refresh_work_is_seed_proportional():
+    """The point of the exercise: a small batch's warm frontier relaxes
+    far fewer edges than the cold run from the source (host replay of the
+    monotone sweep, counting frontier out-degree per iteration)."""
+    g = powerlaw_social(600, avg_degree=8, seed=3)
+    rng = np.random.default_rng(4)
+    adds, dels, w = random_batch(rng, g, k_add=3, k_del=0)
+    delta = g.update(adds, dels, weights=w)
+    plan = delta.plan()
+
+    prev = compile_bundled("sssp").bind(g)(src=0)
+
+    def replay_edges(g2, dist0, frontier0):
+        indptr = np.asarray(g2.indptr)
+        out_deg = np.diff(indptr)
+        indices, edge_src = np.asarray(g2.indices), np.asarray(g2.edge_src)
+        wts = np.asarray(g2.weights, np.int64)
+        dist = np.asarray(dist0, np.int64).copy()
+        front = frontier0.copy()
+        edges = 0
+        while front.any():
+            edges += int(out_deg[front].sum())
+            fe = front[edge_src]
+            cand = np.full(len(dist), 2**30, np.int64)
+            np.minimum.at(cand, indices[fe], dist[edge_src[fe]] + wts[fe])
+            improved = cand < dist
+            dist = np.minimum(dist, cand)
+            front = improved
+        return edges, dist
+
+    g2 = delta.graph
+    n = g2.num_nodes
+    cold_front = np.zeros(n, bool)
+    cold_front[0] = True
+    cold_dist = np.full(n, 2**30, np.int64)
+    cold_dist[0] = 0
+    cold_edges, cold = replay_edges(g2, cold_dist, cold_front)
+
+    warm_dist = np.asarray(prev["dist"], np.int64).copy()
+    warm_dist[plan.reset] = 2**30
+    warm_dist[0] = 0
+    warm_edges, warm = replay_edges(g2, warm_dist, plan.seed.copy())
+    np.testing.assert_array_equal(cold, warm)
+    assert warm_edges < cold_edges, (warm_edges, cold_edges)

@@ -155,6 +155,83 @@ def test_distributed_bc_matches_oracle_under_any_schedule(g, sched):
                                err_msg=repr(sched))
 
 
+def _dijkstra(edges: dict, n: int, src: int) -> np.ndarray:
+    """Oracle SSSP over a {(u, v): w} edge dict."""
+    import heapq
+    adj = {}
+    for (u, v), w in edges.items():
+        adj.setdefault(u, []).append((v, w))
+    dist = np.full(n, int(INF_I32), np.int64)
+    dist[src] = 0
+    pq = [(0, src)]
+    while pq:
+        d, u = heapq.heappop(pq)
+        if d > dist[u]:
+            continue
+        for v, w in adj.get(u, ()):
+            nd = d + w
+            if nd < dist[v]:
+                dist[v] = nd
+                heapq.heappush(pq, (nd, v))
+    return dist
+
+
+@settings(max_examples=6, deadline=None)
+@given(graphs(max_n=20, max_e=60), st.data())
+def test_service_interleaved_updates_match_oracle(g, data):
+    """Random interleavings of write batches and queries against a
+    GraphService graph, under random schedules: every query answer equals
+    the oracle's from-scratch replay of the edge set at that instant
+    (`g.update` semantics: dels first, adds replace, last write wins)."""
+    import asyncio
+
+    from repro.serve import GraphService, ServiceConfig
+
+    n = g.num_nodes
+    sched = data.draw(st.builds(
+        Schedule,
+        refresh_threshold_frac=st.sampled_from([0.0, 0.25, 1.0]),
+        num_buckets=st.sampled_from([1, 4]),
+        batch_sources=st.sampled_from([0, 2, 32]),
+    ))
+    vertex = st.integers(0, n - 1)
+    ops = data.draw(st.lists(st.one_of(
+        st.tuples(st.just("query"), vertex),
+        st.tuples(st.just("update"),
+                  st.lists(st.tuples(vertex, vertex, st.integers(1, 9)),
+                           max_size=4),
+                  st.lists(st.tuples(vertex, vertex), max_size=4)),
+    ), min_size=1, max_size=6))
+
+    edges = {(int(u), int(v)): int(w)
+             for u, v, w in zip(np.asarray(g.edge_src),
+                                np.asarray(g.indices),
+                                np.asarray(g.weights))}
+
+    async def run():
+        async with GraphService(ServiceConfig(max_wait_ms=0.0)) as svc:
+            svc.register_graph("g", g, schedule=sched, kinds=["sssp"])
+            for op in ops:
+                if op[0] == "query":
+                    got = np.asarray(await svc.query("g", "sssp", src=op[1]),
+                                     np.int64)
+                    want = _dijkstra(edges, n, op[1])
+                    assert np.array_equal(got, want), (sched, op)
+                else:
+                    _, adds, dels = op
+                    for u, v in dels:
+                        edges.pop((u, v), None)
+                    for u, v, w in adds:
+                        edges[(u, v)] = w
+                    delta = await svc.update_graph(
+                        "g", adds=[(u, v) for u, v, _ in adds] or None,
+                        dels=dels or None,
+                        weights=[w for _, _, w in adds] or None)
+                    assert delta.graph.num_edges == len(edges)
+
+    asyncio.run(run())
+
+
 @settings(max_examples=15, deadline=None)
 @given(graphs())
 def test_ell_view_preserves_edges(g):

@@ -380,3 +380,81 @@ def test_dataclass_record_roundtrip_guard():
     """_record helper stays in sync with TuningRecord's fields."""
     rec = _record("a" * 16, "f" * 16, Schedule())
     assert TuningRecord.from_dict(dataclasses.asdict(rec)) == rec
+
+
+# --- write batches (g.update through the service) ----------------------------
+
+def test_update_after_eviction_reprepares_and_answers(g_a, g_b):
+    """An updated graph whose derived views were LRU-evicted still serves
+    correct answers: view adoption is a no-op on an empty context and the
+    next query transparently re-prepares against the new version."""
+    async def main():
+        cfg = ServiceConfig(backend="pallas", view_budget_bytes=1)
+        async with GraphService(cfg) as svc:
+            svc.register_graph("a", g_a, kinds=["sssp"])
+            svc.register_graph("b", g_b, kinds=["sssp"])  # evicts a's views
+            assert any(n == "a" for n, _ in svc.stats()["evictions"])
+            e_src = np.asarray(g_a.edge_src)
+            e_dst = np.asarray(g_a.indices)
+            delta = await svc.update_graph(
+                "a", adds=[(1, 7), (3, 11)], weights=[2, 2],
+                dels=[(int(e_src[0]), int(e_dst[0]))])
+            assert svc.handle("a").graph is delta.graph
+            out = await svc.query("a", "sssp", src=1)
+            assert np.array_equal(np.asarray(out),
+                                  sssp_ref(delta.graph, 1).astype(np.int32))
+            assert svc.stats()["updates"] == 1
+
+    asyncio.run(main())
+
+
+class BlockingKind(QueryKind):
+    """Sweep blocks until released; reports the graph version it ran on."""
+
+    name = "block"
+    per_source = True
+    program = None
+
+    def __init__(self):
+        import threading
+        self.entered = threading.Event()
+        self.release = threading.Event()
+
+    def make_runner(self, handle, sched, width):
+        g = handle.graph          # the version this runner was built for
+
+        def run(params_list):
+            self.entered.set()
+            self.release.wait(10)
+            return [np.int32(g.version) for _ in params_list]
+
+        return run
+
+
+def test_update_defers_until_pinned_sweep_unpins(g_a):
+    """A write batch arriving mid-sweep must wait for the pin to drop: the
+    in-flight sweep finishes against the old version, the update applies
+    the moment the last pin releases, and later queries see the new one."""
+    async def main():
+        kind = BlockingKind()
+        async with GraphService(ServiceConfig(max_wait_ms=0.0)) as svc:
+            svc.register_kind(kind)
+            svc.register_graph("a", g_a, kinds=["block", "sssp"])
+            q = asyncio.create_task(svc.query("a", "block", src=0))
+            await asyncio.to_thread(kind.entered.wait, 10)  # sweep pinned
+            upd = asyncio.create_task(svc.update_graph("a", adds=[(0, 1)],
+                                                       weights=[2]))
+            await asyncio.sleep(0.05)
+            assert not upd.done(), "update applied while the graph was pinned"
+            assert svc.handle("a").graph.version == 0
+            kind.release.set()
+            swept_version = int(await q)
+            delta = await upd
+            assert swept_version == 0, "sweep must see the pre-update version"
+            assert delta.graph.version == 1
+            assert svc.handle("a").graph is delta.graph
+            out = await svc.query("a", "sssp", src=0)
+            assert np.array_equal(np.asarray(out),
+                                  sssp_ref(delta.graph, 0).astype(np.int32))
+
+    asyncio.run(main())
