@@ -263,9 +263,12 @@ def default_params(prog: CompiledProgram, g, *, seed: int = 0,
         if p.kind == "node_param":
             params[p.name] = 0
         elif p.kind == "set_n":
-            params[p.name] = rng.integers(
-                0, g.num_nodes, size=min(num_sources, g.num_nodes)
-            ).astype(np.int32)
+            # without replacement: a duplicated source would fill two batch
+            # lanes with the same query (and break set-semantics programs
+            # like BC that accumulate one contribution per distinct source)
+            params[p.name] = rng.choice(
+                g.num_nodes, size=min(num_sources, g.num_nodes),
+                replace=False).astype(np.int32)
         elif p.kind == "scalar":
             v = _SCALAR_DEFAULTS.get(p.name.lower(), 1)
             params[p.name] = int(v) if p.dtype == "int32" else float(v)
@@ -323,6 +326,10 @@ class TuningRecord:
     seed: int
     graph_stats: dict = dataclasses.field(default_factory=dict)
     pruned_candidates: int = 0  # statically illegal schedules skipped unmeasured
+    # cost-model provenance: fingerprint of the stats-nearest neighbor graph
+    # whose best schedule seeded trial #0 ("" = unseeded run). Each trial
+    # dict also carries "source": "seeded" | "search".
+    seeded_from: str = ""
     version: int = RECORD_VERSION
 
     def key(self) -> tuple:
@@ -439,8 +446,57 @@ class TuningStore:
     def put(self, rec: TuningRecord) -> None:
         self._records[rec.key()] = rec
 
+    def records(self) -> List[TuningRecord]:
+        """All records, in deterministic (sorted-key) order."""
+        return [self._records[k] for k in sorted(self._records)]
+
     def __len__(self) -> int:
         return len(self._records)
+
+
+# --------------------------------------------------------------------------
+# cost-model seeding (nearest-stats-neighbor warm starts)
+# --------------------------------------------------------------------------
+
+# size-like stats compare on a log scale (a 1k- and a 2k-node graph are
+# "close"; a 1k- and a 1M-node graph are not, whatever the linear gap says);
+# ratio/fraction stats are already scale-free and compare linearly
+_SEED_LOG_FEATURES = ("num_nodes", "num_edges", "avg_degree",
+                      "max_out_degree", "max_in_degree", "skew",
+                      "avg_weight", "probe_depth")
+_SEED_LIN_FEATURES = ("deg_cv", "probe_max_frontier_frac",
+                      "probe_growth", "probe_reach_frac")
+
+
+def stats_distance(a: dict, b: dict) -> float:
+    """Normalized distance between two `GraphContext.stats()` dicts —
+    the cost model's notion of "graphs this schedule should transfer to"."""
+    import math
+    d = 0.0
+    for k in _SEED_LOG_FEATURES:
+        fa = math.log1p(abs(float(a.get(k, 0.0))))
+        fb = math.log1p(abs(float(b.get(k, 0.0))))
+        d += (fa - fb) ** 2
+    for k in _SEED_LIN_FEATURES:
+        d += (float(a.get(k, 0.0)) - float(b.get(k, 0.0))) ** 2
+    return math.sqrt(d)
+
+
+def nearest_record(store: TuningStore, digest: str, backend: str,
+                   stats: dict) -> Optional[TuningRecord]:
+    """The store record for the same (program, backend) whose graph stats
+    are nearest to `stats`, or None when the store has nothing comparable.
+    Deterministic: ties break toward the smaller fingerprint (store order
+    is sorted)."""
+    best, best_d = None, float("inf")
+    for rec in store.records():
+        if rec.source_digest != digest or rec.backend != backend \
+                or not rec.graph_stats:
+            continue
+        d = stats_distance(stats, rec.graph_stats)
+        if d < best_d:
+            best, best_d = rec, d
+    return best
 
 
 # --------------------------------------------------------------------------
@@ -485,7 +541,12 @@ def autotune(prog: CompiledProgram, g, *, budget: int = 16, seed: int = 0,
     * `store` (a `TuningStore` or a path) persists the result; a valid
       stored record for (source digest, backend, graph fingerprint) skips
       measurement entirely, and a record whose digest or fingerprint no
-      longer matches is ignored and re-tuned.
+      longer matches is ignored and re-tuned. On a miss, records for the
+      same (program, backend) on OTHER graphs act as a cost model: the
+      stats-nearest neighbor's winning schedule is measured first as a
+      seeded trial #0 (`TuningRecord.seeded_from` + per-trial "source"
+      record the provenance), with the program's own schedule still
+      measured right behind it.
 
     Deterministic given (graph, seed, budget) and a deterministic
     `measure`: candidate order, truncation, and tie-breaking (earliest
@@ -514,15 +575,40 @@ def autotune(prog: CompiledProgram, g, *, budget: int = 16, seed: int = 0,
                                     record=rec, from_store=True)
 
     stats = ctx.stats()
-    cands = search_space(stats, base=prog.schedule,
-                         tune_batch=_has_set_param(prog),
-                         backend=prog.backend)
+    fx = program_analysis(prog.dsl_source).functions.get(prog.name)
+
+    # ---- cost-model seeding: on a store *miss*, the record for the
+    # stats-nearest graph tuned under the same (program, backend) proposes
+    # its winning schedule as trial #0 — a warm start for unseen graphs.
+    # The program's own schedule is still always measured (it follows the
+    # seed in the candidate list), so seeding can propose but never force:
+    # the result is never measured-worse than the unseeded path.
+    seeded_from = ""
+    seeds: List[Schedule] = []
+    if store is not None and budget >= 2:
+        neighbor = nearest_record(store, digest, prog.backend, stats)
+        if neighbor is not None:
+            try:
+                ssched = neighbor.best_schedule()
+            except ValueError:
+                ssched = None      # foreign Schedule version -> no seed
+            if ssched is not None and not (fx is not None and any(
+                    d.severity == ERROR
+                    for d in check_schedule(fx, ssched, prog.backend))):
+                seeds = [ssched]
+                seeded_from = neighbor.graph_fingerprint
+                if verbose:
+                    print(f"  seeding trial 0 from neighbor "
+                          f"{seeded_from}: {ssched}")
+
+    cands = _dedup(seeds + search_space(
+        stats, base=prog.schedule, tune_batch=_has_set_param(prog),
+        backend=prog.backend))
     # static legality pruning: candidates the analysis layer can reject
     # (e.g. priority="delta" on a program with no monotone Min relax) are
     # dropped before any trial budget is spent measuring them. Trial #0 —
     # the program's own schedule — already passed the compile gate, so the
-    # baseline is never pruned.
-    fx = program_analysis(prog.dsl_source).functions.get(prog.name)
+    # baseline is never pruned (and the seed, if any, was vetted above).
     pruned = 0
     if fx is not None:
         legal = []
@@ -550,7 +636,9 @@ def autotune(prog: CompiledProgram, g, *, budget: int = 16, seed: int = 0,
         trial = prog.recompile(cand)       # compile-cache hit when seen
         secs = float(measure(trial.bind(g), params))
         trials.append({"schedule": schedule_to_dict(cand),
-                       "ms": round(1e3 * secs, 4)})
+                       "ms": round(1e3 * secs, 4),
+                       "source": ("seeded" if seeded_from and i == 0
+                                  else "search")})
         if secs < best_s:                  # strict <: earliest trial wins ties
             best_i, best_s = i, secs
         if verbose:
@@ -558,13 +646,16 @@ def autotune(prog: CompiledProgram, g, *, budget: int = 16, seed: int = 0,
             print(f"  trial {i:2d}: {1e3 * secs:9.2f} ms  {cand}{mark}")
 
     best = cands[best_i]
+    # default_ms keys off the program's OWN schedule (trial #0 when
+    # unseeded; trial #1 behind the seed otherwise)
+    base_i = cands.index(prog.schedule) if prog.schedule in cands else 0
     record = TuningRecord(
         source_digest=digest, backend=prog.backend,
         graph_fingerprint=fingerprint, fn_name=prog.name,
         schedule=schedule_to_dict(best),
-        best_ms=trials[best_i]["ms"], default_ms=trials[0]["ms"],
+        best_ms=trials[best_i]["ms"], default_ms=trials[base_i]["ms"],
         trials=trials, budget=budget, seed=seed, graph_stats=dict(stats),
-        pruned_candidates=pruned)
+        pruned_candidates=pruned, seeded_from=seeded_from)
     if store is not None:
         store.put(record)
         store.save()

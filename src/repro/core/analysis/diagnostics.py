@@ -72,6 +72,11 @@ REGISTRY: Dict[str, Tuple[str, str]] = {
     "SP208": (WARNING,
               "refresh_threshold_frac set to a non-default value but the "
               "program has no iterative construct to warm-start"),
+    "SP209": (ERROR,
+              "incremental refresh on a self-gated peeling loop (a while "
+              "body plain-writes a property its own visitation filter "
+              "reads); the converged state cannot be warm-started soundly "
+              "— recompute from scratch"),
     "SP301": (ERROR, "unknown backend"),
     "SP302": (ERROR, "program defines no function with the requested name"),
     "SP303": (ERROR, "no bundled program with the requested name"),

@@ -134,6 +134,14 @@ class FunctionEffects:
     has_bfs: bool = False
     has_iter_loop: bool = False   # fixedPoint / while / do-while / BFS
     has_relax: bool = False       # any Min/Max update (direction-switchable)
+    # Self-gated peeling: a while/do-while whose body plain-writes a property
+    # that gates which vertices the enclosing forall / if visits (k-core's
+    # `filter(core == 1) { ... v.core = 0 }`).  The converged state is the
+    # fixpoint of an erosion, not a monotone relax — warm-starting it from a
+    # pre-update run is unsound, so `bound.refresh` refuses (SP209).
+    refresh_unsafe: bool = False
+    refresh_unsafe_reason: str = ""
+    refresh_unsafe_line: int = 0
 
     def delta_target(self) -> Optional[FixedPointTarget]:
         """The unique monotone int32 Min-relax property eligible for
@@ -158,6 +166,7 @@ class FunctionEffects:
                 "has_bfs": self.has_bfs,
                 "has_iter_loop": self.has_iter_loop,
                 "has_relax": self.has_relax,
+                "refresh_unsafe": self.refresh_unsafe,
                 "delta_target": (self.delta_target().prop
                                  if self.delta_target() else None),
             },
@@ -190,6 +199,11 @@ class _EffectWalker:
                            parallel=False)
         self.regions: List[Region] = [self.root]
         self.loops: List[_LoopEntry] = []
+        # SP209 detection state: depth of enclosing while/do-while regions,
+        # and a stack of gate-prop sets (props read by enclosing forall
+        # filters / if conditions — they decide which slots get visited)
+        self.while_depth = 0
+        self.gate_props: List[Set[str]] = []
         self.scalar_depths: Dict[str, int] = {
             p.name: 0 for p in info.params}
         self.diagnostics: List[Diagnostic] = []
@@ -271,6 +285,25 @@ class _EffectWalker:
             for a in e.args:
                 self._read(a)
 
+    def _prop_reads(self, e) -> Set[str]:
+        """Property names read anywhere in ``e`` (filter sugar included)."""
+        props: Set[str] = set()
+        if e is None:
+            return props
+
+        def visit(n):
+            if isinstance(n, A.Identifier):
+                sym = getattr(n, "sym", None)
+                if getattr(n, "filter_sugar_iter", None) is not None or (
+                        sym is not None
+                        and sym.kind in ("prop_node", "prop_edge")):
+                    props.add(n.name)
+            elif isinstance(n, A.MemberAccess):
+                if self._is_prop(n.member):
+                    props.add(n.member)
+        A.walk(e, visit)
+        return props
+
     def _weighted(self, e) -> bool:
         """Does the expression read an edge weight / edge property?"""
         found = [False]
@@ -327,6 +360,19 @@ class _EffectWalker:
         cross = tsym.kind == "iter_nbr" or shared
         self._record_write(prop, line, cross=cross, reduce_op=reduce_op,
                            minmax=minmax, weighted=weighted, extra=extra)
+        if (reduce_op is None and minmax is None and not extra
+                and self.while_depth > 0 and not self.fx.refresh_unsafe
+                and any(prop in g for g in self.gate_props)):
+            # plain write to a prop that gates visitation, inside a while
+            # region: the self-gated peeling pattern (see FunctionEffects)
+            self.fx.refresh_unsafe = True
+            self.fx.refresh_unsafe_line = line
+            self.fx.refresh_unsafe_reason = (
+                f"property {prop!r} is plain-assigned inside a while loop "
+                f"and also gates which vertices are visited (a filter/if "
+                f"condition reads it); this peeling-style fixpoint is not "
+                f"monotone over graph updates, so a warm start from the "
+                f"pre-update state is unsound")
         if shared and reduce_op is None and minmax is None and not extra:
             self._emit(
                 "SP101",
@@ -378,19 +424,25 @@ class _EffectWalker:
             self.fx.has_iter_loop = True
             self._push_region("while", s.line)
             self._read(s.cond)
+            self.while_depth += 1
             self._block(s.body)
+            self.while_depth -= 1
             self._pop_region()
         elif isinstance(s, A.DoWhileStmt):
             self.fx.has_iter_loop = True
             self._push_region("do_while", s.line)
+            self.while_depth += 1
             self._block(s.body)
+            self.while_depth -= 1
             self._read(s.cond)
             self._pop_region()
         elif isinstance(s, A.IfStmt):
             self._read(s.cond)
+            self.gate_props.append(self._prop_reads(s.cond))
             self._block(s.then_body)
             if s.else_body is not None:
                 self._block(s.else_body)
+            self.gate_props.pop()
         elif isinstance(s, A.IterateInBFSStmt):
             self._bfs(s)
         elif isinstance(s, A.ProcCallStmt):
@@ -468,7 +520,9 @@ class _EffectWalker:
             self._read(s.range_call)
         if s.filter_expr is not None:
             self._read(s.filter_expr)
+        self.gate_props.append(self._prop_reads(s.filter_expr))
         self._block(s.body)
+        self.gate_props.pop()
         self.loops.pop()
         self._pop_region()
 

@@ -180,6 +180,13 @@ class BoundProgram:
                 f"{prog.name!r} has no incremental refresh: the program "
                 "has no top-level iterative construct (fixedPoint / while "
                 "/ do-while) to warm-start")
+        fx = program_analysis(prog.dsl_source).functions.get(prog.name)
+        if fx is not None and fx.refresh_unsafe:
+            from .analysis import diag
+            raise DiagnosticError(
+                [diag("SP209", fx.refresh_unsafe_reason, fn=prog.name,
+                      line=fx.refresh_unsafe_line, src=prog.dsl_source)],
+                header=f"refresh rejected for {prog.name!r}")
         if delta.graph is not self.graph:
             raise ValueError(
                 "refresh must run on the post-update graph: bind the "

@@ -131,6 +131,9 @@ class BatchInfo:
     valid: str                   # py expr: bool[B] padding mask (last chunk)
     it: str                      # the set-iterator name bound to srcs2d
     arrays: set = field(default_factory=set)  # names shaped [B, N] (vs shared [N])
+    # per-source scalars declared at set-loop body depth: one value per
+    # lane, shaped [B] (vs the [B, N] property arrays above)
+    lane_scalars: set = field(default_factory=set)
 
 
 def ctx_chain(ctx):
@@ -238,6 +241,15 @@ class ExprEmitter:
         if isinstance(e, I.IScalar):
             return e.name
         if isinstance(e, I.IVertexLocal):
+            b = self.batch
+            if b is not None and e.name in b.lane_scalars:
+                # per-source [B] scalar read inside a vertex/edge/BFS region:
+                # add a trailing axis so it broadcasts against the [B, N] /
+                # [B, E] arrays of the batched region; at host level the
+                # bare [B] value is the per-lane scalar itself
+                for c in ctx_chain(ctx):
+                    if isinstance(c, (VertexCtx, EdgeCtx, BFSCtx)):
+                        return f"{e.name}[:, None]"
             return e.name
         if isinstance(e, I.INodeParam):
             return self.index_of(e.name, ctx)

@@ -126,6 +126,10 @@ class DistCodegen(LocalCodegen):
     # frontier flows through the partitioned push/pull supersteps unchanged,
     # so no `_dell` padded view is taken
     supports_delta_ell = False
+    # per-source while/do-while loops (and their lane scalars) stay on the
+    # sequential per-source fallback: fused lanes would need shard-uniform
+    # per-lane trip counts threaded through every BSP superstep
+    supports_batched_scalar_loops = False
 
     def __init__(self, irfn: I.IRFunction, schedule=None):
         super().__init__(irfn, schedule=schedule)
@@ -640,8 +644,12 @@ class DistCodegen(LocalCodegen):
         super().s_IAssignProp(s, ctx)   # vertex-level path works on blocks
 
     def s_IAssign(self, s: I.IAssign, ctx):
-        # host-scalar reductions from parallel regions need a global combine
-        if s.reduce_op is not None and not s.vertex_local and \
+        # host-scalar reductions from parallel regions need a global combine;
+        # per-source lane scalars (sequential set-loop fallback) too — each
+        # shard only sums its own block, and the enclosing while trip count
+        # must stay shard-uniform
+        if s.reduce_op is not None and \
+                (not s.vertex_local or s.name in self.lane_scalars) and \
                 (self._vertex_ctx(ctx) is not None or self._edge_ctx(ctx) is not None):
             if self.batch is not None:
                 raise CodegenError("host-scalar reduction inside a batched "

@@ -35,6 +35,12 @@ class LocalCodegen:
     # relax (rt.relax_minplus_delta); pallas relaxes through its own sliced
     # kernels instead and the distributed backend relaxes partitioned arrays
     supports_delta_ell = True
+    # per-source `while` / `do-while` loops inside a batched source-set
+    # region lower to one fused lane-masked while_loop (all B lanes advance
+    # together, converged lanes frozen); the distributed backend keeps the
+    # sequential per-source fallback instead (its BSP supersteps would need
+    # shard-uniform trip counts per lane)
+    supports_batched_scalar_loops = True
 
     def __init__(self, irfn: I.IRFunction, schedule: Optional[Schedule] = None,
                  batch_sources: Optional[int] = None):
@@ -45,6 +51,9 @@ class LocalCodegen:
         self.dtypes = {}
         self.write_alias = {}              # fixedPoint redirects
         self.batch = None                  # active BatchInfo (batched set loop)
+        self.lane_scalars = set()          # per-source scalars of the active
+        #                                    set loop (host-scalar semantics
+        #                                    per source; [B] when batched)
         self._delta_prop = None            # Min-relax prop of the active
         #                                    delta-stepping fixedPoint
         # every engine knob is baked into the emitted source as a literal:
@@ -89,15 +98,17 @@ class LocalCodegen:
 
     def _snapshot(self):
         return (len(self.em.lines), self.em._uid, list(self.declared),
-                dict(self.dtypes), dict(self.write_alias))
+                dict(self.dtypes), dict(self.write_alias),
+                set(self.lane_scalars))
 
     def _restore(self, state):
-        nlines, uid, decl, dts, wa = state
+        nlines, uid, decl, dts, wa, ls = state
         del self.em.lines[nlines:]
         self.em._uid = uid
         self.declared[:] = decl
         self.dtypes = dts
         self.write_alias = wa
+        self.lane_scalars = ls
         self.batch = None
         self.ex.batch = None
 
@@ -267,6 +278,25 @@ class LocalCodegen:
 
     def s_IDeclScalar(self, s: I.IDeclScalar, ctx):
         em = self.em
+        if s.vertex_local and self._vertex_ctx(ctx) is None \
+                and self._edge_ctx(ctx) is None:
+            # declared at set-loop body depth (outside any vertex/edge
+            # region): a per-source "lane" scalar with host-scalar semantics
+            # per source — a plain scalar in the sequential lowering, one
+            # [B] slot per lane in a batched region
+            if self.batch is not None and not self.supports_batched_scalar_loops:
+                raise CodegenError("per-source scalar inside a batched source "
+                                   "loop (falls back to the sequential loop)")
+            self.lane_scalars.add(s.name)
+            init = self.ex.expr(s.init, ctx) if s.init is not None else "0"
+            if self.batch is not None:
+                self.batch.lane_scalars.add(s.name)
+                em.w(f"{s.name} = jnp.broadcast_to(jnp.asarray({init}, "
+                     f"{self.jdt(s.dtype)}), ({self.batch.size},))")
+            else:
+                em.w(f"{s.name} = jnp.asarray({init}, {self.jdt(s.dtype)})")
+            self.declare(s.name, s.dtype)
+            return
         if s.vertex_local:
             shape = (f"({self.batch.size}, {self.VLEN})" if self.batch is not None
                      else f"({self.VLEN},)")
@@ -317,6 +347,8 @@ class LocalCodegen:
         cast = (lambda x: f"jnp.asarray({x}, {self.jdt(dt)})") if dt else (lambda x: x)
         vctx = self._vertex_ctx(ctx)
         ectx = self._edge_ctx(ctx)
+        if s.name in self.lane_scalars:
+            return self._lane_scalar_assign(s, e, vctx, ectx)
         if s.reduce_op is None:
             if s.vertex_local:
                 if vctx is not None and vctx.mask:
@@ -368,6 +400,54 @@ class LocalCodegen:
             em.w(f"{s.name} = {cast(f'{s.name} {op} jnp.sum({masked})')}")
         else:
             em.w(f"{s.name} = {cast(f'{s.name} {op} ({e})')}")
+
+    def _lane_scalar_assign(self, s: I.IAssign, e: str, vctx, ectx):
+        """Assignment to a per-source lane scalar (declared at set-loop body
+        depth): host-scalar reduction semantics per source. The sequential
+        lowering is exactly the host-scalar paths; a batched region keeps a
+        [B] lane axis — reductions from vertex/edge regions collapse the
+        vertex/edge axis only, so each lane accumulates its own total."""
+        em = self.em
+        dt = self.dtype_of(s.name)
+        cast = (lambda x: f"jnp.asarray({x}, {self.jdt(dt)})") if dt else (lambda x: x)
+        b = self.batch
+        if s.reduce_op is None:
+            if vctx is not None or ectx is not None:
+                raise CodegenError(f"unsynchronized write to per-source "
+                                   f"scalar {s.name} from a parallel region")
+            if b is not None:
+                em.w(f"{s.name} = jnp.broadcast_to({cast(e)}, ({b.size},))")
+            else:
+                em.w(f"{s.name} = {cast(e)}")
+            return
+        op = _RED[s.reduce_op]
+        if b is None:
+            if ectx is not None:
+                masked = f"jnp.where({ectx.mask}, {e}, 0)" if ectx.mask else e
+                em.w(f"{s.name} = {cast(f'{s.name} {op} jnp.sum({masked})')}")
+            elif vctx is not None:
+                masked = f"jnp.where({vctx.mask}, {e}, 0)" if vctx.mask else e
+                em.w(f"{s.name} = {cast(f'{s.name} {op} jnp.sum({masked})')}")
+            else:
+                em.w(f"{s.name} = {cast(f'{s.name} {op} ({e})')}")
+            return
+        if ectx is None and vctx is None:
+            # set-body level: every lane applies the same scalar update
+            em.w(f"{s.name} = {cast(f'{s.name} {op} ({e})')}")
+            return
+        if s.reduce_op != "+":
+            raise CodegenError(
+                f"per-source scalar {s.reduce_op} reduction from a parallel "
+                "region inside a batched source loop")
+        if ectx is not None:
+            masked = f"jnp.where({ectx.mask}, {e}, 0)" if ectx.mask else e
+            body = (f"jnp.broadcast_to(jnp.asarray({masked}), "
+                    f"({b.size},) + {ectx.seg}.shape)")
+        else:
+            masked = f"jnp.where({vctx.mask}, {e}, 0)" if vctx.mask else e
+            body = (f"jnp.broadcast_to(jnp.asarray({masked}), "
+                    f"({b.size}, {self.VLEN}))")
+        em.w(f"{s.name} = {cast(f'{s.name} + jnp.sum({body}, axis=1)')}")
 
     # ---- loops ------------------------------------------------------------------
     def _vertex_ctx(self, ctx):
@@ -786,7 +866,9 @@ class LocalCodegen:
     def s_IDoWhile(self, s: I.IDoWhile, ctx):
         em = self.em
         if self.batch is not None:
-            raise CodegenError("do-while inside a batched source loop")
+            if not self.supports_batched_scalar_loops:
+                raise CodegenError("do-while inside a batched source loop")
+            return self._batched_scalar_loop(s, ctx, do_while=True)
         carry = self.carries(s.body)
         pack = ", ".join(carry)
         n = em.uid("dw")
@@ -806,7 +888,9 @@ class LocalCodegen:
     def s_IWhile(self, s: I.IWhile, ctx):
         em = self.em
         if self.batch is not None:
-            raise CodegenError("while inside a batched source loop")
+            if not self.supports_batched_scalar_loops:
+                raise CodegenError("while inside a batched source loop")
+            return self._batched_scalar_loop(s, ctx, do_while=False)
         carry = self.carries(s.body)
         pack = ", ".join(carry)
         n = em.uid("wl")
@@ -821,6 +905,57 @@ class LocalCodegen:
             em.w(f"return ({pack},)" if len(carry) == 1 else f"return ({pack})")
         em.w(f"_state = jax.lax.while_loop({n}_cond, {n}_body, ({pack}{',' if len(carry) == 1 else ''}))")
         em.w(f"({pack},) = _state" if len(carry) == 1 else f"({pack}) = _state")
+
+    def _batched_scalar_loop(self, s, ctx, do_while: bool):
+        """Per-source `while` / `do-while` inside a BATCHED source-set
+        region: all B lanes run one fused `jax.lax.while_loop`. The loop
+        condition evaluates per lane (lane scalars read as [B] at host
+        level); the fused loop runs while ANY lane is still active, and
+        lanes that already converged are FROZEN — every carried per-source
+        value ([B, N] property or [B] lane scalar) rolls back to its
+        previous value on inactive lanes after each sweep, so an
+        early-converging lane keeps exactly the state it converged to."""
+        em = self.em
+        b = self.batch
+        carry = self.carries(s.body)
+        if not carry:
+            raise CodegenError("batched per-source loop carries no state")
+        for v in carry:
+            if v not in b.arrays and v not in b.lane_scalars:
+                raise CodegenError(
+                    f"batched per-source loop writes shared state {v} "
+                    "(falls back to the sequential lowering)")
+        cond = self.ex.expr(s.cond, ctx)
+        pack = ", ".join(carry)
+        one = len(carry) == 1
+        n = em.uid("bdw" if do_while else "bwl")
+        first = f"{n}_first"
+        state = f"({first}, {pack})" if do_while else \
+            (f"({pack},)" if one else f"({pack})")
+        em.w(f"def {n}_cond(_state):")
+        with em.block():
+            em.w(f"{state} = _state")
+            any_ = f"jnp.any({cond})"
+            em.w(f"return {first} | {any_}" if do_while else f"return {any_}")
+        em.w(f"def {n}_body(_state):")
+        with em.block():
+            em.w(f"{state} = _state")
+            act = f"{first} | ({cond})" if do_while else cond
+            em.w(f"{n}_act = jnp.broadcast_to(jnp.asarray({act}), ({b.size},))")
+            for v in carry:
+                em.w(f"{n}_p_{v} = {v}")
+            self.body(s.body, ctx)
+            for v in carry:
+                sel = f"{n}_act" if v in b.lane_scalars else f"{n}_act[:, None]"
+                em.w(f"{v} = jnp.where({sel}, {v}, {n}_p_{v})")
+            if do_while:
+                em.w(f"return (jnp.asarray(False), {pack})")
+            else:
+                em.w(f"return ({pack},)" if one else f"return ({pack})")
+        init = f"(jnp.asarray(True), {pack})" if do_while else \
+            (f"({pack},)" if one else f"({pack})")
+        em.w(f"_state = jax.lax.while_loop({n}_cond, {n}_body, {init})")
+        em.w(f"{state} = _state")
 
     def s_ISetLoop(self, s: I.ISetLoop, ctx):
         bs = self.schedule.batch_sources
@@ -840,13 +975,17 @@ class LocalCodegen:
         pack = ", ".join(carry)
         n = em.uid("set")
         mark = len(self.declared)
+        saved_ls = set(self.lane_scalars)
         em.w(f"def {n}_body(_i, _carry):")
         with em.block():
             em.w(f"({pack},) = _carry" if len(carry) == 1 else f"({pack}) = _carry")
             em.w(f"{s.it} = {s.set_name}[_i]")
             hctx = HostCtx()
             hctx.node_bindings[s.it] = s.it
-            self.body(s.body, hctx)
+            try:
+                self.body(s.body, hctx)
+            finally:
+                self.lane_scalars = saved_ls
             em.w(f"return ({pack},)" if len(carry) == 1 else f"return ({pack})")
         del self.declared[mark:]   # loop-local props don't escape
         # static shape guard: fori_loop traces its body even for a zero trip
@@ -882,6 +1021,7 @@ class LocalCodegen:
                              srcs2d=f"{srcs}[:, None]", valid=ok, it=s.it)
             self.batch = info
             self.ex.batch = info
+            saved_ls = set(self.lane_scalars)
             hctx = HostCtx()
             hctx.node_bindings[s.it] = info.srcs2d
             try:
@@ -889,6 +1029,7 @@ class LocalCodegen:
             finally:
                 self.batch = None
                 self.ex.batch = None
+                self.lane_scalars = saved_ls
             em.w(f"return ({pack},)" if len(carry) == 1 else f"return ({pack})")
         del self.declared[mark:]   # loop-local props don't escape
         # static shape guard: fori_loop traces its body even for a zero trip

@@ -12,8 +12,10 @@ i.e. O(N/√P) for a square grid — a 16× collective-byte reduction on the
 16×16 production mesh. State lives as N/(R·C) pieces per device; the edge
 tiles carry pre-remapped local indices (graph/partition.py:partition_2d).
 
-These steps are validated against the 1-D backend and the oracles in
-tests/test_dist2d.py; the roofline comparison is EXPERIMENTS.md §Perf-G.
+These steps are validated against the NumPy oracles across mesh shapes in
+tests/test_dist2d.py (plus the single-shape checks in
+tests/test_distributed.py); benchmarks/bench_table5_mpi.py times them
+against the 1-D backend.
 """
 from __future__ import annotations
 

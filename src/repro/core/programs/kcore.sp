@@ -1,0 +1,25 @@
+// Beyond-paper program: k-core decomposition by iterative degree peeling
+// (directed: out-degree within the surviving subgraph). core == 1 marks
+// vertices still in the k-core; each sweep peels every survivor whose
+// surviving out-degree dropped below k, until a sweep peels nothing.
+// NOTE: peeling is non-monotone over graph updates (an edge deletion can
+// only shrink the core, an insertion only grow it, but the converged
+// `core` flags cannot be warm-started soundly) — the analysis layer flags
+// this program refresh-unsafe (SP209) and `bound.refresh` rejects it.
+function Compute_KCore(Graph g, int k, propNode<int> core) {
+    g.attachNodeProperty(core = 1);
+    int changed = 1;
+    while (changed > 0) {
+        changed = 0;
+        forall(v in g.nodes().filter(core == 1)) {
+            int deg = 0;
+            forall(nbr in g.neighbors(v).filter(core == 1)) {
+                deg = deg + 1;
+            }
+            if (deg < k) {
+                v.core = 0;
+                changed += 1;
+            }
+        }
+    }
+}

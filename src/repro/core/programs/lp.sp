@@ -1,0 +1,23 @@
+// Beyond-paper program: label-propagation community detection by min-label
+// relaxation along edge direction, pull AND push in one fixedPoint sweep —
+// both sides lower to the frontier-relax hybrid (the unweighted Min relax),
+// so the schedule's direction/threshold knobs apply to each.
+function Compute_LP(Graph g, propNode<int> label, propNode<bool> modified) {
+    g.attachNodeProperty(label = 0, modified = True);
+    forall(v in g.nodes()) {
+        v.label = v;
+    }
+    bool finished = False;
+    fixedPoint until (finished : !modified) {
+        forall(v in g.nodes()) {
+            forall(nbr in g.nodesTo(v).filter(modified == True)) {
+                <v.label, v.modified> = <Min(v.label, nbr.label), True>;
+            }
+        }
+        forall(v in g.nodes().filter(modified == True)) {
+            forall(nbr in g.neighbors(v)) {
+                <nbr.label, nbr.modified> = <Min(nbr.label, v.label), True>;
+            }
+        }
+    }
+}

@@ -1,0 +1,36 @@
+// Beyond-paper program: personalized PageRank over a source set. Each
+// source's restart vector is an indicator on that source; the per-source
+// do-while runs on the batched [B, N] lanes (one sweep serves B
+// personalization vectors), and the shared `ppr` output accumulates the
+// lane results — the aggregate PPR of the seed set (PPR is linear in the
+// restart vector, so per-user rows are recoverable by singleton sets).
+function Compute_PPR(Graph g, float beta, float delta, int maxIter, propNode<float> ppr, SetN<g> sourceSet) {
+    g.attachNodeProperty(ppr = 0);
+    forall(src in sourceSet) {
+        propNode<float> rank;
+        propNode<float> rank_nxt;
+        propNode<float> restart;
+        g.attachNodeProperty(rank = 0, rank_nxt = 0, restart = 0);
+        src.restart = 1;
+        src.rank = 1;
+        int iterCount = 0;
+        float diff = 0.0;
+        do {
+            diff = 0.0;
+            forall(v in g.nodes()) {
+                float sum = 0.0;
+                forall(nbr in g.nodesTo(v)) {
+                    sum = sum + nbr.rank / g.count_outNbrs(nbr);
+                }
+                float newRank = (1 - delta) * v.restart + delta * sum;
+                diff += abs(newRank - v.rank);
+                v.rank_nxt = newRank;
+            }
+            rank = rank_nxt;
+            iterCount++;
+        } while ((diff > beta) && (iterCount < maxIter));
+        forall(v in g.nodes()) {
+            v.ppr += v.rank;
+        }
+    }
+}

@@ -72,6 +72,82 @@ def pagerank_ref(g: CSRGraph, delta: float = 0.85, beta: float = 1e-4,
     return pr
 
 
+def ppr_matrix_ref(g: CSRGraph, sources, delta: float = 0.85,
+                   beta: float = 1e-4, max_iter: int = 100) -> np.ndarray:
+    """Per-source personalized PageRank rows, [B, N].  Mirrors ppr.sp: the
+    restart vector is the indicator on the source, rank starts at restart,
+    each sweep pulls rank/out_deg over in-neighbors, and the do-while runs
+    per source while (L1 diff > beta) && (iter < maxIter)."""
+    indptr, indices, _, rev_indptr, rev_indices, _ = _np_csr(g)
+    n = g.num_nodes
+    out_deg = np.diff(indptr).astype(np.float64)
+    rows = np.zeros((len(sources), n))
+    for i, src in enumerate(sources):
+        restart = np.zeros(n)
+        restart[int(src)] = 1.0
+        rank = restart.copy()
+        it = 0
+        while True:   # do-while: always at least one sweep
+            nxt = np.zeros(n)
+            for v in range(n):
+                s, e = rev_indptr[v], rev_indptr[v + 1]
+                nbrs = rev_indices[s:e]
+                contrib = rank[nbrs] / np.maximum(out_deg[nbrs], 1)
+                nxt[v] = (1 - delta) * restart[v] + delta * contrib.sum()
+            diff = np.sum(np.abs(nxt - rank))
+            rank = nxt
+            it += 1
+            if not (diff > beta and it < max_iter):
+                break
+        rows[i] = rank
+    return rows
+
+
+def ppr_ref(g: CSRGraph, sources, delta: float = 0.85, beta: float = 1e-4,
+            max_iter: int = 100) -> np.ndarray:
+    """Aggregate PPR of a seed set — the sum of the per-source rows, which
+    is exactly what ppr.sp's shared `ppr` property accumulates."""
+    return ppr_matrix_ref(g, sources, delta, beta, max_iter).sum(axis=0)
+
+
+def label_propagation_ref(g: CSRGraph) -> np.ndarray:
+    """Min-label propagation along edge direction (lp.sp): every vertex
+    converges to the smallest vertex id among its directed ancestors
+    (itself included)."""
+    indptr, indices, *_ = _np_csr(g)
+    n = g.num_nodes
+    label = np.arange(n, dtype=np.int64)
+    changed = True
+    while changed:
+        changed = False
+        for v in range(n):
+            lv = label[v]
+            for w in indices[indptr[v]:indptr[v + 1]]:
+                if lv < label[w]:
+                    label[w] = lv
+                    changed = True
+    return label
+
+
+def kcore_ref(g: CSRGraph, k: int) -> np.ndarray:
+    """Directed k-core by iterative peeling (kcore.sp): repeatedly drop
+    every surviving vertex whose out-degree *within the survivors* is < k;
+    the fixpoint is order-independent.  Returns 0/1 survivor flags."""
+    indptr, indices, *_ = _np_csr(g)
+    n = g.num_nodes
+    core = np.ones(n, np.int64)
+    while True:
+        deg = np.zeros(n, np.int64)
+        for v in range(n):
+            if core[v]:
+                nbrs = indices[indptr[v]:indptr[v + 1]]
+                deg[v] = int(core[nbrs].sum())
+        peel = (core == 1) & (deg < k)
+        if not peel.any():
+            return core
+        core[peel] = 0
+
+
 def triangle_count_ref(g: CSRGraph) -> int:
     """Paper Fig. 20: for v, for u in nbrs(v) u<v, for w in nbrs(v) w>v,
     count if (u, w) is an edge."""

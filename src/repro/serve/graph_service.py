@@ -49,10 +49,12 @@ Query kinds (`QueryKind`) define what a lane computes. Built-ins:
   BC is an *aggregate* over its source set, so requests are not per-source
   separable across users; each request runs as its own sweep, with the
   set's sources batched into the program's internal [N, B] lanes.
+* ``ppr``  — per-user personalized PageRank (`rt.ppr_multi`): each user's
+  restart vector is one lane of a batched SpMM operand, so B users'
+  personalization queries share a single sweep; ``src=`` required.
 
-PPR-style per-user personalization kinds slot in the same way (a
-personalization vector per lane is exactly a batched SpMM operand):
-subclass `QueryKind` and `register_kind` it.
+Other personalization kinds slot in the same way: subclass `QueryKind`
+and `register_kind` it.
 
 See ``docs/serving.md`` for the architecture and the `ServiceConfig` knob
 table (lint-checked against the dataclass by tests/test_docs.py).
@@ -267,7 +269,37 @@ class BcKind(QueryKind):
         return run
 
 
-BUILTIN_KINDS = (SsspKind(), BfsKind(), BcKind())
+class PprKind(QueryKind):
+    """Per-user personalized PageRank (float32[N] per request): the user's
+    restart vector is the indicator on their ``src=`` vertex, and B users'
+    vectors pack into one batched sweep (`rt.ppr_multi`)."""
+
+    name = "ppr"
+    program = "ppr"
+
+    def make_runner(self, handle, sched: Schedule, width: int):
+        batched = jax.jit(functools.partial(rt.ppr_multi))
+        bound = handle.bounds.get("ppr")
+
+        def run(params_list):
+            srcs = [int(p["src"]) for p in params_list]
+            if len(srcs) == 1 and bound is not None:
+                # a singleton seed set's aggregate PPR IS the user's row
+                out = bound(beta=1e-4, delta=0.85, maxIter=100,
+                            sourceSet=np.asarray(srcs, np.int32))
+                return [np.asarray(out["ppr"], np.float32)]
+            b = _pad_width(len(srcs), width)
+            arr = np.full(b, srcs[0], np.int32)
+            arr[:len(srcs)] = srcs
+            rank = jax.block_until_ready(
+                batched(handle.graph, jnp.asarray(arr)))
+            rank = np.asarray(rank)
+            return [rank[i] for i in range(len(srcs))]
+
+        return run
+
+
+BUILTIN_KINDS = (SsspKind(), BfsKind(), BcKind(), PprKind())
 
 
 # --------------------------------------------------------------------------

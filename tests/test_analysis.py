@@ -22,7 +22,8 @@ from repro.core.semantic import SemanticError, analyze
 from repro.schedule import Schedule
 
 BAD_DIR = os.path.join(os.path.dirname(__file__), "programs_bad")
-ALL_PROGRAMS = ["bc", "cc", "pr", "sssp", "sssp_pull", "tc"]
+ALL_PROGRAMS = ["bc", "cc", "kcore", "lp", "ppr", "pr", "sssp",
+                "sssp_pull", "tc"]
 
 
 def _bad(name):
@@ -88,6 +89,22 @@ def test_bundled_programs_strict_clean(name):
     assert fx.diagnostics == []
     for backend in ("local", "pallas", "distributed"):
         assert check_schedule(fx, Schedule(), backend) == []
+
+
+def test_refresh_unsafe_flag_never_a_diagnostic():
+    """SP209 is an ERROR in the registry but is raised only by
+    `bound.refresh`: the analyzer flags kcore's self-gated peeling loop
+    refresh-unsafe without emitting any diagnostic, so the strict analyze
+    CI step stays clean while compile keeps working."""
+    fx = _only_fx(load_program_source("kcore"))
+    assert fx.refresh_unsafe
+    assert fx.refresh_unsafe_line > 0
+    assert "core" in fx.refresh_unsafe_reason
+    assert fx.diagnostics == []
+    assert REGISTRY["SP209"][0] == ERROR
+    # programs whose while/fixedPoint bodies are not self-gated stay safe
+    for name in ("pr", "ppr", "lp", "cc", "sssp"):
+        assert not _only_fx(load_program_source(name)).refresh_unsafe, name
 
 
 # --- schedule legality through the compile gate -----------------------------
@@ -176,40 +193,71 @@ def test_analyzer_is_deterministic():
 SNAPSHOT = {
     "bc": {
         "flags": dict(has_set_loop=True, has_bfs=True, has_iter_loop=True,
-                      has_relax=True, delta_target=None),
+                      has_relax=True, refresh_unsafe=False,
+                      delta_target=None),
         "props": {"BC": (0, 2, ["+"], []), "delta": (2, 2, ["+"], []),
                   "sigma": (3, 3, ["+"], [])},
         "fixedpoints": [],
     },
     "cc": {
         "flags": dict(has_set_loop=False, has_bfs=False, has_iter_loop=True,
-                      has_relax=True, delta_target="comp"),
+                      has_relax=True, refresh_unsafe=False,
+                      delta_target="comp"),
         "props": {"comp": (2, 3, [], ["Min"]), "modified": (2, 2, [], [])},
         "fixedpoints": [("modified", [("comp", "Min", "int32", False, True)])],
     },
+    "kcore": {
+        # the self-gated peeling loop: `core` is plain-written inside the
+        # while sweep AND read by the forall filters — refresh-unsafe
+        "flags": dict(has_set_loop=False, has_bfs=False, has_iter_loop=True,
+                      has_relax=False, refresh_unsafe=True,
+                      delta_target=None),
+        "props": {"core": (2, 2, [], [])},
+        "fixedpoints": [],
+    },
+    "lp": {
+        "flags": dict(has_set_loop=False, has_bfs=False, has_iter_loop=True,
+                      has_relax=True, refresh_unsafe=False,
+                      delta_target="label"),
+        "props": {"label": (4, 4, [], ["Min"]), "modified": (3, 3, [], [])},
+        "fixedpoints": [("modified",
+                         [("label", "Min", "int32", False, True)])],
+    },
+    "ppr": {
+        "flags": dict(has_set_loop=True, has_bfs=False, has_iter_loop=True,
+                      has_relax=False, refresh_unsafe=False,
+                      delta_target=None),
+        "props": {"ppr": (0, 2, ["+"], []), "rank": (3, 3, [], []),
+                  "rank_nxt": (1, 2, [], []), "restart": (1, 2, [], [])},
+        "fixedpoints": [],
+    },
     "pr": {
         "flags": dict(has_set_loop=False, has_bfs=False, has_iter_loop=True,
-                      has_relax=False, delta_target=None),
+                      has_relax=False, refresh_unsafe=False,
+                      delta_target=None),
         "props": {"pageRank": (2, 2, [], []), "pageRank_nxt": (1, 1, [], [])},
         "fixedpoints": [],
     },
     "sssp": {
         "flags": dict(has_set_loop=False, has_bfs=False, has_iter_loop=True,
-                      has_relax=True, delta_target="dist"),
+                      has_relax=True, refresh_unsafe=False,
+                      delta_target="dist"),
         "props": {"dist": (2, 3, [], ["Min"]), "modified": (2, 3, [], []),
                   "weight": (1, 0, [], [])},
         "fixedpoints": [("modified", [("dist", "Min", "int32", True, True)])],
     },
     "sssp_pull": {
         "flags": dict(has_set_loop=False, has_bfs=False, has_iter_loop=True,
-                      has_relax=True, delta_target="dist"),
+                      has_relax=True, refresh_unsafe=False,
+                      delta_target="dist"),
         "props": {"dist": (2, 3, [], ["Min"]), "modified": (2, 3, [], []),
                   "weight": (1, 0, [], [])},
         "fixedpoints": [("modified", [("dist", "Min", "int32", True, True)])],
     },
     "tc": {
         "flags": dict(has_set_loop=False, has_bfs=False, has_iter_loop=False,
-                      has_relax=False, delta_target=None),
+                      has_relax=False, refresh_unsafe=False,
+                      delta_target=None),
         "props": {},
         "fixedpoints": [],
     },

@@ -269,6 +269,111 @@ def test_stats_shape(g_pl, g_road):
 
 
 # --------------------------------------------------------------------------
+# cost-model seeding: nearest-stats-neighbor warm starts
+# --------------------------------------------------------------------------
+
+def test_stats_distance_identity_and_family_ordering(g_pl, g_road):
+    from repro.autotune import stats_distance
+    s_pl = get_context(g_pl).stats()
+    s_rd = get_context(g_road).stats()
+    assert stats_distance(s_pl, s_pl) == 0.0
+    # a same-family graph sits nearer than a different family
+    g_pl2 = preferential_attachment(330, m=5, seed=8)
+    s_pl2 = get_context(g_pl2).stats()
+    assert stats_distance(s_pl, s_pl2) < stats_distance(s_pl, s_rd)
+
+
+def test_nearest_record_matches_graph_family(sssp_prog, g_pl, g_road,
+                                             tmp_path):
+    from repro.autotune import nearest_record
+    path = str(tmp_path / "tuned.json")
+    autotune(sssp_prog, g_pl, budget=4, seed=0, measure=fake_measure,
+             store=path)
+    autotune(sssp_prog, g_road, budget=4, seed=0, measure=fake_measure,
+             store=path)
+    store = TuningStore(path)
+    digest = source_digest(sssp_prog.dsl_source)
+    g_probe = preferential_attachment(300, m=5, seed=21)
+    probe = get_context(g_probe).stats()
+    rec = nearest_record(store, digest, "local", probe)
+    assert rec is not None
+    assert rec.graph_fingerprint == get_context(g_pl).fingerprint()
+    # nothing comparable for another backend
+    assert nearest_record(store, digest, "distributed", probe) is None
+
+
+def test_autotune_seeds_unseen_graph_from_store(sssp_prog, g_pl, tmp_path):
+    """Store miss + populated store: the stats-nearest record proposes its
+    winner as trial #0 (provenance recorded), the program's own schedule is
+    still measured, and the result is never measured-worse than default."""
+    path = str(tmp_path / "tuned.json")
+    r1 = autotune(sssp_prog, g_pl, budget=6, seed=0, measure=fake_measure,
+                  store=path)
+    g2 = preferential_attachment(300, m=5, seed=11)    # unseen graph
+    r2 = autotune(sssp_prog, g2, budget=6, seed=0, measure=fake_measure,
+                  store=path)
+    assert not r2.from_store
+    rec = r2.record
+    assert rec.seeded_from == get_context(g_pl).fingerprint()
+    assert rec.trials[0]["source"] == "seeded"
+    assert schedule_from_dict(rec.trials[0]["schedule"]) == r1.schedule
+    assert all(t["source"] == "search" for t in rec.trials[1:])
+    # the own-schedule baseline is measured too, so seeding only helps
+    assert any(schedule_from_dict(t["schedule"]) == sssp_prog.schedule
+               for t in rec.trials)
+    assert rec.best_ms <= rec.default_ms
+
+
+def test_seeding_needs_store_and_budget(sssp_prog, g_pl, tmp_path):
+    r = autotune(sssp_prog, g_pl, budget=4, seed=0, measure=fake_measure)
+    assert r.record.seeded_from == ""
+    assert all(t["source"] == "search" for t in r.record.trials)
+    # budget=1 leaves no room to measure both seed and baseline: no seed,
+    # trial #0 stays the program's own schedule
+    path = str(tmp_path / "tuned.json")
+    autotune(sssp_prog, g_pl, budget=4, seed=0, measure=fake_measure,
+             store=path)
+    g2 = preferential_attachment(300, m=5, seed=12)
+    r1 = autotune(sssp_prog, g2, budget=1, seed=0, measure=fake_measure,
+                  store=path)
+    assert r1.record.seeded_from == ""
+    assert r1.record.trials[0]["schedule"] == schedule_to_dict(
+        sssp_prog.schedule)
+    assert r1.record.trials[0]["source"] == "search"
+
+
+def test_seeded_from_round_trips_and_old_records_load(sssp_prog, g_pl,
+                                                      tmp_path):
+    path = str(tmp_path / "tuned.json")
+    autotune(sssp_prog, g_pl, budget=4, seed=0, measure=fake_measure,
+             store=path)
+    g2 = preferential_attachment(300, m=5, seed=13)
+    rec = autotune(sssp_prog, g2, budget=4, seed=0, measure=fake_measure,
+                   store=path).record
+    assert rec.seeded_from
+    thawed = TuningRecord.from_json(rec.to_json())
+    assert thawed == rec and thawed.seeded_from == rec.seeded_from
+    # records written before the field existed load with the default
+    d = json.loads(rec.to_json())
+    del d["seeded_from"]
+    assert TuningRecord.from_dict(d).seeded_from == ""
+
+
+def test_default_params_sources_without_replacement():
+    """Set-valued params draw distinct sources: a duplicated source would
+    fill two batch lanes with the same query (and double-count one
+    contribution in set-semantics programs like BC)."""
+    g_small = road(3, seed=0)          # 9 nodes < the 16-source default
+    p = default_params(compile_bundled("bc"), g_small, seed=0)
+    srcs = p["sourceSet"]
+    assert len(srcs) == g_small.num_nodes
+    assert len(np.unique(srcs)) == len(srcs)
+    for s in range(5):                 # distinct under any seed
+        q = default_params(compile_bundled("bc"), g_small, seed=s)
+        assert len(np.unique(q["sourceSet"])) == len(q["sourceSet"])
+
+
+# --------------------------------------------------------------------------
 # distributed backend (exclusion removed in the frontier-aware dist PR)
 # --------------------------------------------------------------------------
 

@@ -12,6 +12,10 @@ from repro.core import Schedule, compile_bundled
     ("sssp_pull", dict(src=0)),
     ("pr", dict(beta=1e-4, delta=0.85, maxIter=60)),
     ("tc", dict()),
+    ("lp", dict()),
+    ("kcore", dict(k=2)),
+    ("ppr", dict(beta=1e-4, delta=0.85, maxIter=60,
+                 sourceSet=np.array([0, 7, 23], np.int32))),
 ])
 @pytest.mark.parametrize("gname", ["UR", "SW"])
 def test_local_vs_pallas(name, params, gname, graph_suite):
@@ -134,6 +138,85 @@ def test_sssp_batched_columns_match_per_source(gfix, g_powerlaw, g_disconnected)
     for i, s in enumerate(srcs):
         out = compile_bundled("sssp", backend="local")(g, src=int(s))
         assert np.array_equal(dist[i], np.asarray(out["dist"])), f"src {s}"
+
+
+# --- beyond-paper programs (ppr / lp / kcore) vs their oracles ---------------
+# ppr exercises the batched per-source do-while (lane scalars + frozen
+# converged lanes); lp the two-sided Min relax; kcore the host-level while
+# around a filtered peel.
+
+@pytest.mark.parametrize("backend", ["local", "pallas"])
+@pytest.mark.parametrize("gname", ["UR", "SW"])
+def test_ppr_vs_oracle(backend, gname, graph_suite):
+    from repro.graph.algorithms_ref import ppr_ref
+    g = graph_suite[gname]
+    srcs = np.array([0, 7, 23], np.int32)
+    out = compile_bundled("ppr", backend=backend)(
+        g, beta=1e-4, delta=0.85, maxIter=60, sourceSet=srcs)
+    np.testing.assert_allclose(
+        np.asarray(out["ppr"]), ppr_ref(g, srcs, max_iter=60),
+        rtol=1e-4, atol=1e-5)
+
+
+@pytest.mark.parametrize("backend", ["local", "pallas"])
+def test_ppr_batched_vs_sequential(backend, graph_suite):
+    """The [B, N]-lane do-while (converged lanes frozen mid-batch) must
+    reproduce the per-source sequential loop exactly, partial final chunk
+    included (5 sources over B=4)."""
+    g = graph_suite["UR"]
+    srcs = np.array([3, 11, 0, 42, 77], np.int32)
+    params = dict(beta=1e-4, delta=0.85, maxIter=60, sourceSet=srcs)
+    seq = compile_bundled("ppr", backend=backend, batch_sources=1)
+    bat = compile_bundled("ppr", backend=backend, batch_sources=4)
+    assert "while_loop" in bat.source
+    np.testing.assert_allclose(np.asarray(bat(g, **params)["ppr"]),
+                               np.asarray(seq(g, **params)["ppr"]),
+                               rtol=1e-4, atol=1e-5)
+
+
+def test_ppr_multi_rows_match_singleton_sets(graph_suite):
+    """PPR is linear in the restart vector: rt.ppr_multi's row b must equal
+    the compiled program's aggregate over the singleton set {sources[b]}
+    (the contract the serving layer's single-query path relies on)."""
+    from repro.core import runtime as rt
+    g = graph_suite["SW"]
+    srcs = np.array([2, 9, 31], np.int32)
+    rows = np.asarray(rt.ppr_multi(g, srcs))
+    prog = compile_bundled("ppr", backend="local")
+    for i, s in enumerate(srcs):
+        out = prog(g, beta=1e-4, delta=0.85, maxIter=100,
+                   sourceSet=np.array([s], np.int32))
+        np.testing.assert_allclose(rows[i], np.asarray(out["ppr"]),
+                                   rtol=1e-4, atol=1e-5, err_msg=f"src {s}")
+
+
+@pytest.mark.parametrize("backend", ["local", "pallas"])
+def test_lp_vs_oracle(backend, g_powerlaw):
+    from repro.graph.algorithms_ref import label_propagation_ref
+    out = compile_bundled("lp", backend=backend)(g_powerlaw)
+    assert np.array_equal(np.asarray(out["label"]),
+                          label_propagation_ref(g_powerlaw))
+
+
+def test_lp_under_delta_schedule(graph_suite):
+    """lp's unweighted Min relax is delta-steppable (like cc): same fixed
+    point under the priority schedule."""
+    g = graph_suite["UR"]
+    base = compile_bundled("lp", backend="local")(g)
+    sched = Schedule(priority="delta", delta_bucket=8)
+    out = compile_bundled("lp", backend="local", schedule=sched)(g)
+    assert np.array_equal(np.asarray(out["label"]), np.asarray(base["label"]))
+
+
+@pytest.mark.parametrize("backend", ["local", "pallas"])
+@pytest.mark.parametrize("k", [1, 2, 3])
+def test_kcore_vs_oracle(backend, k, graph_suite):
+    # k=2 leaves a nontrivial survivor set on UR; k=3 cascades to empty
+    # (0-out-degree vertices peel their in-neighbors); k=1 peels only sinks
+    from repro.graph.algorithms_ref import kcore_ref
+    g = graph_suite["UR"]
+    out = compile_bundled("kcore", backend=backend)(g, k=k)
+    assert np.array_equal(np.asarray(out["core"]), kcore_ref(g, k)), k
 
 
 # --- delta-stepping priority schedule ----------------------------------------

@@ -14,7 +14,8 @@ import pytest
 
 from repro.core import Schedule, compile_bundled, dist
 
-PROGRAMS = ["sssp", "sssp_pull", "pr", "tc", "bc", "cc"]
+PROGRAMS = ["sssp", "sssp_pull", "pr", "tc", "bc", "cc", "ppr", "lp",
+            "kcore"]
 SHARDS = [1, 2, 4, 8]
 
 # the distributed schedule under test: compressed exchange + adaptive
@@ -29,11 +30,17 @@ def _params(name, g):
         return dict(beta=1e-4, delta=0.85, maxIter=60)
     if name == "bc":
         return dict(sourceSet=np.array([0, 7, 23], np.int32))
+    if name == "ppr":
+        return dict(beta=1e-4, delta=0.85, maxIter=60,
+                    sourceSet=np.array([0, 7, 23], np.int32))
+    if name == "kcore":
+        return dict(k=2)
     return {}
 
 
 _OUT_KEY = {"sssp": "dist", "sssp_pull": "dist", "pr": "pageRank",
-            "tc": "triangle_count", "bc": "BC", "cc": "comp"}
+            "tc": "triangle_count", "bc": "BC", "cc": "comp",
+            "ppr": "ppr", "lp": "label", "kcore": "core"}
 
 
 @pytest.fixture(scope="module")

@@ -18,9 +18,10 @@ PARAMS = {
     "sssp_pull": dict(src=0),
     "cc": dict(),
     "pr": dict(beta=1e-5, delta=0.85, maxIter=100),
+    "lp": dict(),
 }
 VALUE_KEY = {"sssp": "dist", "sssp_pull": "dist", "cc": "comp",
-             "pr": "pageRank"}
+             "pr": "pageRank", "lp": "label"}
 
 GRAPHS = {
     "powerlaw": lambda: powerlaw_social(150, avg_degree=8, seed=7),
@@ -94,6 +95,33 @@ def test_refresh_without_loop_raises():
     assert bound.program.refresh_fn is None
     with pytest.raises(ValueError, match="no incremental refresh"):
         bound.refresh({}, None)
+
+
+def test_refresh_ppr_has_no_incremental_path():
+    """ppr's do-while lives inside the source-set loop, so there is no
+    top-level fixpoint to warm-start — refresh refuses up front."""
+    g = GRAPHS["grid"]()
+    bound = compile_bundled("ppr").bind(g)
+    assert bound.program.refresh_fn is None
+    with pytest.raises(ValueError, match="no incremental refresh"):
+        bound.refresh({}, None)
+
+
+def test_refresh_kcore_rejected_as_self_gated_peeling():
+    """kcore plain-writes `core` inside the while body its own filter
+    reads: SP209 — warm-starting the erosion fixpoint is unsound, so
+    refresh must raise rather than silently return wrong cores."""
+    from repro.core.analysis import DiagnosticError
+    rng = np.random.default_rng(8)
+    g = GRAPHS["grid"]()
+    prog = compile_bundled("kcore",
+                           schedule=Schedule(refresh_threshold_frac=1.0))
+    prev = prog.bind(g)(k=2)
+    adds, dels, w = random_batch(rng, g)
+    delta = g.update(adds, dels, weights=w)
+    with pytest.raises(DiagnosticError) as ei:
+        prog.bind(delta.graph).refresh(prev, delta, k=2)
+    assert "SP209" in ei.value.codes
 
 
 def test_refresh_requires_post_update_bind():

@@ -152,6 +152,71 @@ def test_coalesce_false_serves_one_query_per_sweep(g_a):
     assert st["max_batch"] == 1
 
 
+# --- personalized PageRank through the service --------------------------------
+
+def test_ppr_kind_coalesces_and_matches_oracle(g_a):
+    """Concurrent per-user PPR queries pack into one `rt.ppr_multi` sweep;
+    every user gets exactly their own restart vector's ranks."""
+    from repro.graph.algorithms_ref import ppr_matrix_ref
+
+    async def main():
+        cfg = ServiceConfig(schedule=Schedule(batch_sources=4),
+                            max_wait_ms=20.0)
+        async with GraphService(cfg) as svc:
+            svc.register_graph("a", g_a, kinds=["ppr"])
+            srcs = [0, 7, 23, 42]
+            res = await asyncio.gather(
+                *(svc.query("a", "ppr", src=s) for s in srcs))
+            ref = ppr_matrix_ref(g_a, srcs)
+            for row, out in zip(ref, res):
+                np.testing.assert_allclose(np.asarray(out), row,
+                                           rtol=1e-4, atol=1e-5)
+            return svc.stats()
+
+    st = asyncio.run(main())
+    assert st["served"] == 4
+    assert st["max_batch"] > 1          # lanes actually shared a sweep
+
+
+def test_ppr_lone_query_matches_singleton_program(g_a):
+    """A lone PPR request takes the compiled singleton-set path (a
+    one-element seed set's aggregate IS the user's row)."""
+    from repro.graph.algorithms_ref import ppr_matrix_ref
+
+    async def main():
+        async with GraphService(ServiceConfig(max_wait_ms=0.0)) as svc:
+            svc.register_graph("a", g_a, kinds=["ppr"])
+            out = await svc.query("a", "ppr", src=5)
+            np.testing.assert_allclose(np.asarray(out),
+                                       ppr_matrix_ref(g_a, [5])[0],
+                                       rtol=1e-4, atol=1e-5)
+            return svc.stats()
+
+    st = asyncio.run(main())
+    assert st["sweeps"] == 1 and st["mean_batch"] == 1.0
+
+
+def test_zero_wait_lone_request_flushes_immediately(g_a):
+    """max_wait_ms=0 disables coalesce-waiting entirely: a lone admitted
+    request must flush on the first gather pass (deadline already expired),
+    never spin or starve waiting for lane-mates."""
+    async def main():
+        cfg = ServiceConfig(max_wait_ms=0.0,
+                            schedule=Schedule(batch_sources=64))
+        async with GraphService(cfg) as svc:
+            svc.register_graph("a", g_a, kinds=["sssp"])
+            t0 = asyncio.get_running_loop().time()
+            out = await svc.query("a", "sssp", src=2)
+            dt = asyncio.get_running_loop().time() - t0
+            assert np.array_equal(np.asarray(out),
+                                  sssp_ref(g_a, 2).astype(np.int32))
+            return dt, svc.stats()
+
+    dt, st = asyncio.run(main())
+    assert st["served"] == 1 and st["mean_batch"] == 1.0
+    assert dt < 30.0    # bounded by sweep + trace time, not a hang
+
+
 # --- admission control, timeouts, failure scatter -----------------------------
 
 def test_admission_sheds_load_beyond_max_pending(g_a):
@@ -371,8 +436,8 @@ def test_register_graph_rejects_duplicates_and_unknown_kind(g_a):
     svc.register_graph("a", g_a, kinds=["sssp"])
     with pytest.raises(ValueError, match="already registered"):
         svc.register_graph("a", g_a)
-    with pytest.raises(UnknownQueryKind, match="ppr"):
-        svc.register_graph("b", g_a, kinds=["ppr"])
+    with pytest.raises(UnknownQueryKind, match="katz"):
+        svc.register_graph("b", g_a, kinds=["katz"])
     assert "b" not in svc.graphs()    # failed registration fully rolled back
 
 
